@@ -1,0 +1,351 @@
+"""One benchmark per paper table/figure (CPU-scale reproductions).
+
+Each function prints ``name,us_per_call,derived`` CSV rows (the harness
+contract) where ``derived`` carries the table's headline quantity
+(memory reduction %, error gap %, etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FULL,
+    ComplexPair,
+    PrecisionSchedule,
+    contract,
+    get_policy,
+    global_path_cache,
+    greedy_path,
+    path_intermediate_bytes,
+    quantize_complex,
+    theory,
+)
+from repro.core.contraction import PathCache
+from repro.models import UNetConfig, fno_apply, init_unet, unet_apply
+from repro.train.losses import relative_l2
+
+from .common import (
+    compiled_temp_bytes,
+    darcy_data,
+    eval_fno,
+    small_fno,
+    time_fn,
+    train_fno,
+)
+
+ROWS = []
+
+
+def row(name: str, us: float, derived: str):
+    ROWS.append(f"{name},{us:.1f},{derived}")
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 3: GPU memory usage reduction (analog: compiled temp bytes of a
+# train-step gradient computation per policy)
+# ---------------------------------------------------------------------------
+
+
+def bench_memory_fig3():
+    """Memory reduction per policy.  Primary metric: *analytic* bytes of
+    the spectral-domain activations at the policy's storage dtypes (the
+    quantity the paper's Fig. 3 measures on GPU; on this CPU container
+    XLA emulates bf16 at f32 so compiled temp is reported only as a
+    reference, and half-policy temps are not meaningful)."""
+    B, C, n = 8, 32, 64
+    modes = (8, 8)
+    nfreq = n // 2 + 1
+
+    def spectral_bytes(policy):
+        itemsize = 8 if policy.spectral_dtype is None else 4  # c64 vs 2xhalf
+        full_spec = B * C * n * nfreq * itemsize
+        corners = 2 * B * C * modes[0] * modes[1] * itemsize
+        return (full_spec + corners) * 4  # 4 layers
+
+    base = spectral_bytes(FULL)
+    for pol in ("amp_bf16", "half_fno_only", "mixed_fno_bf16"):
+        b = spectral_bytes(get_policy(pol))
+        red = 100.0 * (1 - b / base)
+        row(f"fig3_memory_{pol}", 0.0,
+            f"spectral_bytes={b} reduction={red:.1f}% (paper: up to 50%)")
+    row("fig3_memory_full", 0.0, f"spectral_bytes={base} reduction=0.0%")
+
+
+# ---------------------------------------------------------------------------
+# Fig 4: training throughput (CPU-indicative step times per policy)
+# ---------------------------------------------------------------------------
+
+
+def bench_throughput_fig4():
+    cfg, params = small_fno(hidden=32, modes=(8, 8))
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(4, 1, 64, 64), jnp.float32)
+    t = jnp.asarray(rng.randn(4, 1, 64, 64), jnp.float32)
+    times = {}
+    for pol_name in ("full", "amp_bf16", "mixed_fno_bf16"):
+        policy = get_policy(pol_name)
+
+        @jax.jit
+        def step(p, xx, tt):
+            return jax.grad(
+                lambda pp: relative_l2(fno_apply(pp, xx, cfg, policy), tt)
+            )(p)
+
+        times[pol_name] = time_fn(step, params, x, t)
+    for k, v in times.items():
+        row(f"fig4_throughput_{k}", v, f"speedup_vs_full={times['full']/v:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Fig 5 / Table 6: error parity of mixed vs full training
+# ---------------------------------------------------------------------------
+
+
+def bench_convergence_fig5():
+    cfg, params = small_fno(hidden=16, modes=(8, 8))
+    train, test = darcy_data(n=32, ntrain=32, ntest=16)
+    mixed = get_policy("mixed_fno_bf16")
+    p_full, _ = train_fno(cfg, params, train, FULL, steps=30)
+    p_mix, _ = train_fno(cfg, params, train, mixed, steps=30)
+    # evaluate each model under its own policy: the tanh stabiliser is part
+    # of the trained function (evaluating a tanh-trained model without it
+    # inflates test error ~3x — found empirically, §Perf notes)
+    e_full = eval_fno(cfg, p_full, test, FULL)
+    e_mix = eval_fno(cfg, p_mix, test, mixed)
+    gap = 100.0 * (e_mix - e_full) / e_full
+    row("fig5_convergence", 0.0,
+        f"test_l2_full={e_full:.4f} test_l2_mixed={e_mix:.4f} gap={gap:+.1f}%")
+
+
+# ---------------------------------------------------------------------------
+# Table 1: zero-shot super-resolution + precision schedule
+# ---------------------------------------------------------------------------
+
+
+def bench_superres_table1():
+    cfg, params = small_fno(hidden=16, modes=(8, 8))
+    train, _ = darcy_data(n=32, ntrain=32)
+    _, test_hi = darcy_data(n=64, ntrain=1, ntest=8, maxiter=600)
+
+    results = {}
+    mixed = get_policy("mixed_fno_bf16")
+    p_full, _ = train_fno(cfg, params, train, FULL, steps=30)
+    results["full"] = eval_fno(cfg, p_full, test_hi, FULL)
+    p_mix, _ = train_fno(cfg, params, train, mixed, steps=30)
+    results["mixed"] = eval_fno(cfg, p_mix, test_hi, mixed)
+    # schedule: 25% mixed, 50% amp, 25% full (final phase trains the
+    # un-stabilised function, so full-precision eval is consistent)
+    p = params
+    p, _ = train_fno(cfg, p, train, mixed, steps=8)
+    p, _ = train_fno(cfg, p, train, get_policy("amp_bf16"), steps=15)
+    p, _ = train_fno(cfg, p, train, FULL, steps=7)
+    results["schedule"] = eval_fno(cfg, p, test_hi, FULL)
+    row("table1_superres", 0.0,
+        " ".join(f"{k}={v:.4f}" for k, v in results.items()))
+
+
+# ---------------------------------------------------------------------------
+# Table 2: U-Net comparison
+# ---------------------------------------------------------------------------
+
+
+def bench_unet_table2():
+    cfg, params = small_fno(hidden=16, modes=(8, 8))
+    train, test = darcy_data(n=32, ntrain=32, ntest=16)
+    mixed = get_policy("mixed_fno_bf16")
+    p_fno, _ = train_fno(cfg, params, train, mixed, steps=30)
+    e_fno = eval_fno(cfg, p_fno, test, mixed)
+
+    ucfg = UNetConfig(in_channels=1, out_channels=1, base_width=16, depth=2)
+    uparams = init_unet(jax.random.PRNGKey(1), ucfg)
+    from repro.optim import AdamW
+
+    opt = AdamW(lr=2e-3, weight_decay=0.0)
+    st = opt.init(uparams)
+    a, u = train
+
+    @jax.jit
+    def ustep(p, s):
+        def loss_fn(pp):
+            return relative_l2(unet_apply(pp, a, ucfg, get_policy("amp_bf16")), u)
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p2, s2 = opt.update(g, s, p)
+        return p2, s2, loss
+
+    for _ in range(30):
+        uparams, st, _ = ustep(uparams, st)
+    at, ut = test
+    e_unet = float(relative_l2(unet_apply(uparams, at, ucfg, FULL), ut))
+    row("table2_unet", 0.0, f"fno_l2={e_fno:.4f} unet_l2={e_unet:.4f} fno_wins={e_fno < e_unet}")
+
+
+# ---------------------------------------------------------------------------
+# Table 3 + Appendix B.5/B.6: stabiliser study
+# ---------------------------------------------------------------------------
+
+
+def bench_stabilizers_table3():
+    """The paper's failure mode: the *FFT inside the FNO block* overflows
+    fp16 (the DC bin sums n² grid values), while the real-valued layers
+    around it are fine.  HALF_FNO_ONLY isolates exactly that: compute stays
+    f32, only the spectral pipeline is fp16 — so any NaN comes from the
+    block, and only tanh-class pre-activations prevent it."""
+    cfg, params = small_fno(hidden=16, modes=(8, 8))
+    rng = np.random.RandomState(0)
+    # activations large enough that Σ over the 64x64 grid exceeds 65504
+    a = jnp.asarray(rng.randn(4, 1, 64, 64) * 40.0 + 30.0, jnp.float32)
+
+    for stab in (None, "tanh", "hard_clip", "sigma_clip"):
+        policy = dataclasses.replace(get_policy("half_fno_only"), stabilizer=stab)
+        y = fno_apply(params, a, cfg, policy)
+        finite = bool(np.isfinite(np.asarray(y, np.float32)).all())
+        row(f"table3_stabilizer_{stab or 'none'}", 0.0, f"finite={finite}")
+
+
+# ---------------------------------------------------------------------------
+# Table 4: FNO-block per-stage precision ablation (8 settings)
+# ---------------------------------------------------------------------------
+
+
+def bench_block_precision_table4():
+    from repro.core.spectral import _corner_slices, _corner_weight_ops
+    from repro.core import init_spectral_weights
+
+    rng = np.random.RandomState(0)
+    key = jax.random.PRNGKey(0)
+    params = init_spectral_weights(key, 8, 8, (6, 6))
+    x = jnp.asarray(rng.randn(2, 8, 24, 24), jnp.float32)
+
+    def staged(fft_half, contract_half, ifft_half):
+        xf = jnp.fft.rfftn(jnp.tanh(x), axes=(2, 3))
+        if fft_half:
+            xf = quantize_complex(xf, jnp.float16)
+        slices = _corner_slices((6, 6), xf.shape[2:])
+        out = jnp.zeros((2, 8, *xf.shape[2:]), jnp.complex64)
+        pol = get_policy("mixed_fno_fp16") if contract_half else FULL
+        for c, sl in enumerate(slices):
+            xc = xf[(slice(None), slice(None), *sl)]
+            ops, expr = _corner_weight_ops(params, c, 2)
+            yc = contract(expr, xc, *ops, policy=pol)
+            if isinstance(yc, ComplexPair):
+                yc = yc.to_complex()
+            out = out.at[(slice(None), slice(None), *sl)].set(yc.astype(jnp.complex64))
+        y = jnp.fft.irfftn(out, s=(24, 24), axes=(2, 3))
+        if ifft_half:
+            y = y.astype(jnp.float16)
+        return y.astype(jnp.float32)
+
+    ref = np.asarray(staged(False, False, False))
+    for f in (False, True):
+        for c in (False, True):
+            for i in (False, True):
+                y = np.asarray(staged(f, c, i))
+                rel = np.linalg.norm(y - ref) / (np.linalg.norm(ref) + 1e-12)
+                tag = f"{'H' if f else 'F'}{'H' if c else 'F'}{'H' if i else 'F'}"
+                row(f"table4_block_{tag}", 0.0, f"rel_err_vs_full={rel:.2e}")
+
+
+# ---------------------------------------------------------------------------
+# Tables 8/9/10/11: contraction engine ablations
+# ---------------------------------------------------------------------------
+
+
+def bench_contraction_tables():
+    rng = np.random.RandomState(0)
+    # TFNO CP einsum at realistic-ish sizes
+    b, i, o, mx, my, r = 8, 32, 32, 12, 12, 32
+    X = jnp.asarray(rng.randn(b, i, mx, my) + 1j * rng.randn(b, i, mx, my), jnp.complex64)
+    lam = jnp.asarray(rng.randn(r) + 1j * rng.randn(r), jnp.complex64)
+    Ui = jnp.asarray(rng.randn(i, r) + 1j * rng.randn(i, r), jnp.complex64)
+    Uo = jnp.asarray(rng.randn(o, r) + 1j * rng.randn(o, r), jnp.complex64)
+    Ux = jnp.asarray(rng.randn(mx, r) + 1j * rng.randn(mx, r), jnp.complex64)
+    Uy = jnp.asarray(rng.randn(my, r) + 1j * rng.randn(my, r), jnp.complex64)
+    expr = "bixy,r,ir,or,xr,yr->boxy"
+    ops = (X, lam, Ui, Uo, Ux, Uy)
+    shapes = [t.shape for t in ops]
+
+    # Table 9: path caching
+    cold = PathCache()
+    t_search = time_fn(lambda: greedy_path(expr, shapes, "memory"), iters=5)
+    t_cached = time_fn(lambda: cold.get(expr, shapes, "memory"), iters=5)
+    row("table9_path_cache", t_cached, f"search_us={t_search:.0f} cached_speedup={t_search/max(t_cached,1e-9):.0f}x")
+
+    # Table 10: greedy-memory vs flop-optimal peak intermediate
+    p_mem = greedy_path(expr, shapes, "memory")
+    p_flop = greedy_path(expr, shapes, "flops")
+    m1 = path_intermediate_bytes(expr, shapes, p_mem, itemsize=8)
+    m2 = path_intermediate_bytes(expr, shapes, p_flop, itemsize=8)
+    row("table10_greedy_vs_flop", 0.0,
+        f"greedy_peak={m1}B flop_peak={m2}B reduction={100*(1-m1/max(m2,1)):.1f}%")
+
+    # Table 8: Option A (single giant einsum) vs Option C (pairwise greedy)
+    f_pair = jax.jit(lambda *t: contract(expr, *t, policy=FULL))
+    f_naive = jax.jit(lambda *t: jnp.einsum(expr, *t, optimize=False)
+                      if b * i * o * mx * my * r < 2e8 else f_pair(*t))
+    t_pair = time_fn(f_pair, *ops)
+    t_naive = time_fn(f_naive, *ops)
+    np.testing.assert_allclose(
+        np.asarray(f_pair(*ops)), np.asarray(f_naive(*ops)), rtol=1e-3, atol=1e-3
+    )
+    row("table8_contract_options", t_pair,
+        f"naive_us={t_naive:.0f} ours_speedup={t_naive/max(t_pair,1e-9):.1f}x")
+
+    # Table 11: weights-only-half vs inputs+weights half (bytes moved)
+    half_both = (X.nbytes // 2) + sum(t.nbytes // 2 for t in ops[1:])
+    half_w = X.nbytes + sum(t.nbytes // 2 for t in ops[1:])
+    row("table11_half_inputs", 0.0,
+        f"both_half={half_both}B weights_only={half_w}B extra={100*(half_w/half_both-1):.0f}%")
+
+
+# ---------------------------------------------------------------------------
+# Fig 7: theory bounds vs empirical errors
+# ---------------------------------------------------------------------------
+
+
+def bench_theory_fig7():
+    v = lambda x: np.sin(2 * np.pi * x[..., 0]) + 0.5 * np.prod(x, axis=-1)
+    for d in (1, 2):
+        for m in (8, 16, 32):
+            n = m ** d
+            disc = theory.disc_error(v, m=m, d=d, omega=1.0)
+            prec = theory.prec_error(v, m=m, d=d, omega=1.0, dtype="float16")
+            ub_d = theory.disc_upper_bound(n, d, 1.0, L=2 * np.pi, M=1.5)
+            ub_p = theory.prec_upper_bound(2 ** -11, 1.5)
+            row(f"fig7_theory_d{d}_m{m}", 0.0,
+                f"disc={disc:.2e}<=ub={ub_d:.2e} prec={prec:.2e}<=ub={ub_p:.2e} prec_lt_disc={prec < disc}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 14: frequency-mode ablation
+# ---------------------------------------------------------------------------
+
+
+def bench_freq_modes_fig14():
+    train, test = darcy_data(n=32, ntrain=24, ntest=12)
+    for modes in (4, 8, 12):
+        cfg, params = small_fno(hidden=16, modes=(modes, modes))
+        mixed = get_policy("mixed_fno_bf16")
+        p_f, _ = train_fno(cfg, params, train, FULL, steps=25)
+        p_h, _ = train_fno(cfg, params, train, mixed, steps=25)
+        e_f = eval_fno(cfg, p_f, test, FULL)
+        e_h = eval_fno(cfg, p_h, test, mixed)
+        row(f"fig14_modes_{modes}", 0.0, f"full={e_f:.4f} mixed={e_h:.4f}")
+
+
+ALL = [
+    bench_memory_fig3,
+    bench_throughput_fig4,
+    bench_convergence_fig5,
+    bench_superres_table1,
+    bench_unet_table2,
+    bench_stabilizers_table3,
+    bench_block_precision_table4,
+    bench_contraction_tables,
+    bench_theory_fig7,
+    bench_freq_modes_fig14,
+]

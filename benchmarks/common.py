@@ -1,0 +1,81 @@
+"""Shared benchmark helpers: timing, memory analysis, tiny-problem setup."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FULL, get_policy
+from repro.models import FNOConfig, fno_apply, init_fno
+from repro.train.losses import relative_l2
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (CPU indicative)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def compiled_temp_bytes(fn: Callable, *shapes) -> int:
+    """temp_size_in_bytes of the compiled function (the memory analog of
+    the paper's GPU memory measurements on this CPU container)."""
+    compiled = jax.jit(fn).lower(*shapes).compile()
+    mem = compiled.memory_analysis()
+    return int(getattr(mem, "temp_size_in_bytes", 0))
+
+
+def small_fno(factorization: str = "dense", modes=(8, 8), hidden=32):
+    cfg = FNOConfig(
+        in_channels=1, out_channels=1, hidden_channels=hidden,
+        lifting_channels=hidden, projection_channels=hidden,
+        n_layers=4, modes=modes, factorization=factorization,
+    )
+    params = init_fno(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def darcy_data(n: int = 32, ntrain: int = 32, ntest: int = 16, maxiter: int = 300):
+    from repro.data import sample_darcy_batch
+
+    a_tr, u_tr = sample_darcy_batch(jax.random.PRNGKey(0), n, ntrain, maxiter)
+    a_te, u_te = sample_darcy_batch(jax.random.PRNGKey(1), n, ntest, maxiter)
+    return (a_tr, u_tr), (a_te, u_te)
+
+
+def train_fno(cfg, params, data, policy, steps: int = 40, lr: float = 2e-3):
+    """Plain Adam-free SGD train loop for ablation benches; returns
+    (params, final_train_loss)."""
+    from repro.optim import AdamW
+
+    (a, u) = data
+    opt = AdamW(lr=lr, weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        def loss_fn(pp):
+            pred = fno_apply(pp, a, cfg, policy)
+            return relative_l2(pred, u)
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p2, s2 = opt.update(g, s, p)
+        return p2, s2, loss
+
+    loss = None
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+    return params, float(loss)
+
+
+def eval_fno(cfg, params, data, policy) -> float:
+    a, u = data
+    pred = fno_apply(params, a, cfg, policy)
+    return float(relative_l2(pred, u))

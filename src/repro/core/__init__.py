@@ -1,0 +1,44 @@
+"""Core contribution: mixed-precision spectral compute with guarantees.
+
+Public API:
+  PrecisionPolicy / get_policy / POLICIES  — explicit AMP replacement
+  ComplexPair                              — split-real half complex
+  contract / greedy_path / PathCache       — memory-greedy contraction
+  spectral_conv_apply / init_spectral_weights — mixed-precision FNO block
+  PrecisionSchedule                        — mixed→AMP→full scheduling
+  theory                                   — Thm 3.1/3.2 estimators+bounds
+"""
+from .precision import (  # noqa: F401
+    ComplexPair,
+    PrecisionPolicy,
+    PrecisionSystem,
+    FORMAT_EPS,
+    FORMAT_MAX,
+    FULL,
+    AMP_FP16,
+    AMP_BF16,
+    MIXED_FNO_FP16,
+    MIXED_FNO_BF16,
+    HALF_FNO_ONLY,
+    POLICIES,
+    get_policy,
+    precision_system_for,
+    quantize_complex,
+    simulate_fp8,
+)
+from .contraction import (  # noqa: F401
+    PathCache,
+    contract,
+    global_path_cache,
+    greedy_path,
+    path_flops,
+    path_intermediate_bytes,
+)
+from .stabilizer import get_stabilizer, STABILIZERS  # noqa: F401
+from .spectral import (  # noqa: F401
+    init_spectral_weights,
+    spectral_conv_apply,
+    spectral_param_count,
+)
+from .schedule import PrecisionSchedule  # noqa: F401
+from . import theory  # noqa: F401

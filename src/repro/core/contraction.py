@@ -1,0 +1,302 @@
+"""Memory-greedy tensor-contraction engine (paper Section 4.2, Appendix B.12).
+
+The paper decomposes every multi-operand spectral einsum into *two-operand*
+sub-contractions, chooses the next pair **greedily by intermediate tensor
+size** (opt-einsum's default instead minimises FLOPs — Table 10 shows the
+memory-greedy path saves up to 12% memory on 3-D problems), and **caches the
+path** because shapes are static (Table 9: path search is up to 76% of the
+contraction cost if re-done per call).
+
+This module provides:
+
+* ``greedy_path(expr, shapes, objective)`` — pairwise contraction path,
+  ``objective in {"memory", "flops"}``.
+* ``PathCache`` — shape-keyed memoisation of paths.
+* ``contract(expr, *ops, policy=...)`` — executes the path; operands may be
+  real arrays, complex64 arrays, or split-real ``ComplexPair``s.  Pairwise
+  complex products on ComplexPairs run as **real einsums with f32
+  accumulation** (``preferred_element_type``) and re-quantise the result to
+  the policy's spectral dtype — the TPU-native version of the paper's
+  view-as-real half GEMMs (Option C of Table 8: low-dimensional sub-results
+  stay complex; only the big contractions go split-real).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .precision import ComplexPair, PrecisionPolicy, FULL
+
+Path = Tuple[Tuple[int, int], ...]
+
+
+# ---------------------------------------------------------------------------
+# Expression parsing
+# ---------------------------------------------------------------------------
+
+
+def _parse(expr: str, shapes: Sequence[Tuple[int, ...]]):
+    expr = expr.replace(" ", "")
+    if "->" in expr:
+        lhs, out = expr.split("->")
+    else:
+        lhs = expr
+        # implicit output: indices appearing exactly once, sorted
+        counts: Dict[str, int] = {}
+        for term in lhs.split(","):
+            for ch in term:
+                counts[ch] = counts.get(ch, 0) + 1
+        out = "".join(sorted(ch for ch, n in counts.items() if n == 1))
+    terms = lhs.split(",")
+    if len(terms) != len(shapes):
+        raise ValueError(f"{expr}: {len(terms)} terms but {len(shapes)} operands")
+    dims: Dict[str, int] = {}
+    for term, shape in zip(terms, shapes):
+        if len(term) != len(shape):
+            raise ValueError(f"term {term} rank mismatch with shape {shape}")
+        for ch, s in zip(term, shape):
+            if ch in dims and dims[ch] != s:
+                raise ValueError(f"index {ch}: size {dims[ch]} vs {s}")
+            dims[ch] = s
+    return terms, out, dims
+
+
+def _pair_output(a: str, b: str, others: List[str], final: str) -> str:
+    """Indices of the intermediate from contracting terms a,b: every index of
+    a∪b still needed by a remaining operand or the final output."""
+    needed = set(final)
+    for t in others:
+        needed |= set(t)
+    keep = [ch for ch in dict.fromkeys(a + b) if ch in needed]
+    return "".join(keep)
+
+
+def _size(term: str, dims: Dict[str, int]) -> int:
+    n = 1
+    for ch in term:
+        n *= dims[ch]
+    return n
+
+
+def _pair_flops(a: str, b: str, out: str, dims: Dict[str, int]) -> int:
+    # 2 * prod(all involved indices)
+    return 2 * _size("".join(dict.fromkeys(a + b)), dims)
+
+
+# ---------------------------------------------------------------------------
+# Greedy path search
+# ---------------------------------------------------------------------------
+
+
+def greedy_path(
+    expr: str,
+    shapes: Sequence[Tuple[int, ...]],
+    objective: str = "memory",
+) -> Path:
+    """Pairwise contraction order.
+
+    ``objective="memory"``: at each step pick the pair minimising the size of
+    the intermediate tensor (the paper's choice).  ``"flops"``: minimise the
+    pairwise FLOP count (opt-einsum-default-like), used as the ablation
+    baseline for Table 10.
+    """
+    terms, final, dims = _parse(expr, shapes)
+    terms = list(terms)
+    ids = list(range(len(terms)))  # position -> original operand id chains
+    path: List[Tuple[int, int]] = []
+    while len(terms) > 1:
+        best = None
+        for i in range(len(terms)):
+            for j in range(i + 1, len(terms)):
+                others = [t for k, t in enumerate(terms) if k not in (i, j)]
+                out = _pair_output(terms[i], terms[j], others, final)
+                mem = _size(out, dims)
+                fl = _pair_flops(terms[i], terms[j], out, dims)
+                key = (mem, fl) if objective == "memory" else (fl, mem)
+                if best is None or key < best[0]:
+                    best = (key, i, j, out)
+        _, i, j, out = best
+        path.append((i, j))
+        new_terms = [t for k, t in enumerate(terms) if k not in (i, j)] + [out]
+        terms = new_terms
+    return tuple(path)
+
+
+class PathCache:
+    """Shape-keyed path memoisation (Table 9: avoids the 60-76% path-search
+    overhead per einsum call).  Thread-safe; shapes are static under jit so
+    in practice each (expr, shapes) is computed exactly once per process."""
+
+    def __init__(self):
+        self._cache: Dict[Any, Path] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, expr: str, shapes: Sequence[Tuple[int, ...]], objective: str) -> Path:
+        key = (expr, tuple(map(tuple, shapes)), objective)
+        with self._lock:
+            p = self._cache.get(key)
+            if p is not None:
+                self.hits += 1
+                return p
+        p = greedy_path(expr, shapes, objective)
+        with self._lock:
+            self._cache[key] = p
+            self.misses += 1
+        return p
+
+    def clear(self):
+        with self._lock:
+            self._cache.clear()
+            self.hits = self.misses = 0
+
+
+_GLOBAL_PATH_CACHE = PathCache()
+
+
+def global_path_cache() -> PathCache:
+    return _GLOBAL_PATH_CACHE
+
+
+# ---------------------------------------------------------------------------
+# Pairwise execution with mixed precision
+# ---------------------------------------------------------------------------
+
+
+def _is_complexpair(x) -> bool:
+    return isinstance(x, ComplexPair)
+
+
+def _einsum_real(expr, a, b, accum_dtype, out_dtype):
+    r = jnp.einsum(expr, a, b, preferred_element_type=accum_dtype)
+    return r.astype(out_dtype)
+
+
+def _pairwise(
+    expr: str,
+    a,
+    b,
+    policy: PrecisionPolicy,
+):
+    """One two-operand contraction, dispatching on operand kinds.
+
+    ComplexPair × ComplexPair  -> 4 real einsums, f32 accumulate, requantise.
+    ComplexPair × real         -> 2 real einsums.
+    complex64 × {complex64,real} -> native jnp.einsum (full path).
+    """
+    accum = policy.accum_dtype
+    if _is_complexpair(a) or _is_complexpair(b):
+        half = policy.spectral_dtype or jnp.float32
+        if _is_complexpair(a) and _is_complexpair(b):
+            rr = jnp.einsum(expr, a.re, b.re, preferred_element_type=accum)
+            ii = jnp.einsum(expr, a.im, b.im, preferred_element_type=accum)
+            ri = jnp.einsum(expr, a.re, b.im, preferred_element_type=accum)
+            ir = jnp.einsum(expr, a.im, b.re, preferred_element_type=accum)
+            return ComplexPair((rr - ii).astype(half), (ri + ir).astype(half))
+        if _is_complexpair(a):
+            breal = b.astype(half) if b.dtype != half else b
+            return ComplexPair(
+                _einsum_real(expr, a.re, breal, accum, half),
+                _einsum_real(expr, a.im, breal, accum, half),
+            )
+        areal = a.astype(half) if a.dtype != half else a
+        return ComplexPair(
+            _einsum_real(expr, areal, b.re, accum, half),
+            _einsum_real(expr, areal, b.im, accum, half),
+        )
+    # full-precision (or real-only) path
+    return jnp.einsum(expr, a, b, preferred_element_type=None if jnp.iscomplexobj(a) or jnp.iscomplexobj(b) else accum)
+
+
+def contract(
+    expr: str,
+    *operands,
+    policy: PrecisionPolicy = FULL,
+    objective: str = "memory",
+    cache: Optional[PathCache] = None,
+):
+    """Execute a multi-operand einsum along the memory-greedy path.
+
+    Operands may be real jnp arrays, complex arrays, or ComplexPair.  With a
+    half-precision policy, complex operands are converted to split-real
+    ComplexPairs first (the paper's "both weights and inputs in half" — see
+    Table 11: weights-only-half forfeits nearly all the memory win).
+    """
+    cache = cache or _GLOBAL_PATH_CACHE
+    ops = list(operands)
+
+    # Cast complex operands to the spectral representation mandated by policy.
+    if policy.spectral_is_half:
+        ops = [
+            ComplexPair.from_complex(o, policy.spectral_dtype)
+            if (not _is_complexpair(o)) and jnp.iscomplexobj(o)
+            else o
+            for o in ops
+        ]
+        # real operands participating in spectral contraction go to half too
+        ops = [
+            o.astype(policy.spectral_dtype)
+            if (not _is_complexpair(o)) and o.dtype in (jnp.float32, jnp.float64)
+            else o
+            for o in ops
+        ]
+
+    shapes = [o.shape for o in ops]
+    terms, final, dims = _parse(expr, shapes)
+    path = cache.get(expr, shapes, objective)
+
+    terms = list(terms)
+    vals = list(ops)
+    for (i, j) in path:
+        others = [t for k, t in enumerate(terms) if k not in (i, j)]
+        out = _pair_output(terms[i], terms[j], others, final)
+        sub = f"{terms[i]},{terms[j]}->{out}"
+        res = _pairwise(sub, vals[i], vals[j], policy)
+        vals = [v for k, v in enumerate(vals) if k not in (i, j)] + [res]
+        terms = others + [out]
+
+    (result,) = vals
+    (term,) = terms
+    if term != final:
+        # final transpose/trace fix-up
+        perm_expr = f"{term}->{final}"
+        if _is_complexpair(result):
+            result = ComplexPair(
+                jnp.einsum(perm_expr, result.re), jnp.einsum(perm_expr, result.im)
+            )
+        else:
+            result = jnp.einsum(perm_expr, result)
+    return result
+
+
+def path_intermediate_bytes(
+    expr: str, shapes: Sequence[Tuple[int, ...]], path: Path, itemsize: int = 4
+) -> int:
+    """Peak intermediate size along a path (for napkin math / Table 10)."""
+    terms, final, dims = _parse(expr, shapes)
+    terms = list(terms)
+    peak = 0
+    for step, (i, j) in enumerate(path):
+        others = [t for k, t in enumerate(terms) if k not in (i, j)]
+        out = _pair_output(terms[i], terms[j], others, final)
+        if step < len(path) - 1:  # the last step's output is the result,
+            peak = max(peak, _size(out, dims) * itemsize)  # not an intermediate
+        terms = others + [out]
+    return peak
+
+
+def path_flops(expr: str, shapes: Sequence[Tuple[int, ...]], path: Path) -> int:
+    terms, final, dims = _parse(expr, shapes)
+    terms = list(terms)
+    total = 0
+    for (i, j) in path:
+        others = [t for k, t in enumerate(terms) if k not in (i, j)]
+        out = _pair_output(terms[i], terms[j], others, final)
+        total += _pair_flops(terms[i], terms[j], out, dims)
+        terms = others + [out]
+    return total

@@ -1,0 +1,295 @@
+"""Precision policies for mixed-precision neural operators.
+
+Implements the paper's precision model:
+
+* An ``(a0, eps, T)``-precision system ``q`` (Section 3) — a simplified
+  floating-point quantiser used by the theory module and by the simulated
+  fp8 path (Appendix B.11).
+* ``PrecisionPolicy`` — the explicit, jit-friendly replacement for torch
+  AMP autocast.  Every module takes a policy and casts at its boundaries;
+  there is no global mutable autocast state (JAX-idiomatic).
+* ``ComplexPair`` — split-real representation of complex tensors so that
+  half-precision *real* matmul hardware (MXU / tensor cores) can execute
+  complex contractions.  This is the JAX analogue of the paper's
+  ``view_as_real`` trick.
+
+The paper uses fp16 + loss scaling on GPU; on TPU the native half format
+is bf16.  Both are first-class here (``MIXED_FNO_FP16`` reproduces the
+paper; ``MIXED_FNO_BF16`` is the TPU-native adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# (a0, eps, T)-precision system (paper Section 3 / Appendix A)
+# ---------------------------------------------------------------------------
+
+# Machine-epsilon-style relative spacing for the formats discussed in the
+# paper.  eps(fp16) ~ 2^-11 ~ 4.9e-4 (the paper quotes 1e-4 as the order of
+# magnitude); eps(bf16) ~ 2^-8; eps(fp8-e4m3) ~ 2^-3; eps(fp8-e5m2) ~ 2^-2.
+FORMAT_EPS = {
+    "float64": 2.0 ** -52,
+    "float32": 2.0 ** -23,
+    "bfloat16": 2.0 ** -8,
+    "float16": 2.0 ** -11,
+    "fp8_e4m3": 2.0 ** -3,
+    "fp8_e5m2": 2.0 ** -2,
+}
+
+# Dynamic range (max finite magnitude) per format — used by the simulated
+# fp8 clipping path (Appendix B.11) and the stabiliser analysis.
+FORMAT_MAX = {
+    "float32": 3.4028235e38,
+    "bfloat16": 3.3895314e38,
+    "float16": 65504.0,
+    "fp8_e4m3": 448.0,
+    "fp8_e5m2": 57344.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionSystem:
+    """The paper's ``(a0, eps, T)``-precision system.
+
+    ``S = {0} ∪ {±a0 (1+eps)^i : 0 <= i <= T}`` with ``q(x) = argmin_{y∈S}|x-y|``.
+    """
+
+    a0: float
+    eps: float
+    T: int
+
+    def quantize(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Round ``x`` to the nearest representable value (pure jnp)."""
+        sign = jnp.sign(x)
+        mag = jnp.abs(x)
+        # index of the geometric grid point: i = round(log(mag/a0) / log(1+eps))
+        log_ratio = jnp.log(jnp.maximum(mag, 1e-300) / self.a0)
+        i = jnp.round(log_ratio / jnp.log1p(self.eps))
+        i = jnp.clip(i, 0, self.T)
+        q = self.a0 * jnp.power(1.0 + self.eps, i)
+        # values below a0/2 snap to 0 (underflow)
+        q = jnp.where(mag < self.a0 / 2, 0.0, q)
+        return sign * q
+
+
+def precision_system_for(fmt: str) -> PrecisionSystem:
+    """Build an (a0, eps, T)-system approximating a named float format."""
+    eps = FORMAT_EPS[fmt]
+    vmax = FORMAT_MAX.get(fmt, 3.4e38)
+    # smallest normal, roughly
+    a0 = {
+        "float32": 1.18e-38,
+        "bfloat16": 1.18e-38,
+        "float16": 6.1e-5,
+        "fp8_e4m3": 2.0 ** -6,
+        "fp8_e5m2": 2.0 ** -14,
+    }.get(fmt, 1e-30)
+    import math
+
+    T = int(math.log(vmax / a0) / math.log1p(eps))
+    return PrecisionSystem(a0=a0, eps=eps, T=T)
+
+
+def simulate_fp8(x: jnp.ndarray, fmt: str = "fp8_e5m2") -> jnp.ndarray:
+    """Simulated fp8 via clipping + coarse quantisation (Appendix B.11)."""
+    vmax = FORMAT_MAX[fmt]
+    eps = FORMAT_EPS[fmt]
+    clipped = jnp.clip(x, -vmax, vmax)
+    # quantise mantissa by round-tripping through a scaled grid
+    scale = 1.0 / eps
+    return jnp.round(clipped * scale) / scale if fmt == "__linear__" else _round_mantissa(clipped, fmt)
+
+
+def _round_mantissa(x: jnp.ndarray, fmt: str) -> jnp.ndarray:
+    mant_bits = {"fp8_e4m3": 3, "fp8_e5m2": 2}[fmt]
+    m, e = jnp.frexp(jnp.asarray(x, jnp.float32))
+    m = jnp.round(m * (1 << (mant_bits + 1))) / (1 << (mant_bits + 1))
+    return jnp.ldexp(m, e)
+
+
+# ---------------------------------------------------------------------------
+# Split-real complex representation ("view_as_real" for JAX/TPU)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+class ComplexPair:
+    """A complex tensor stored as two real tensors (re, im).
+
+    This is how half-precision complex data lives on hardware with real-only
+    half matmul units.  Registered as a pytree so it flows through jit/scan/
+    pjit transparently.
+    """
+
+    __slots__ = ("re", "im")
+
+    def __init__(self, re: jnp.ndarray, im: jnp.ndarray):
+        self.re = re
+        self.im = im
+
+    # -- pytree protocol --
+    def tree_flatten(self):
+        return (self.re, self.im), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- constructors / views --
+    @classmethod
+    def from_complex(cls, c: jnp.ndarray, dtype: Any) -> "ComplexPair":
+        return cls(jnp.real(c).astype(dtype), jnp.imag(c).astype(dtype))
+
+    def to_complex(self, dtype: Any = jnp.complex64) -> jnp.ndarray:
+        f = jnp.float32 if dtype == jnp.complex64 else jnp.float64
+        return jax.lax.complex(self.re.astype(f), self.im.astype(f))
+
+    # -- metadata --
+    @property
+    def shape(self):
+        return self.re.shape
+
+    @property
+    def dtype(self):
+        return self.re.dtype
+
+    def astype(self, dtype) -> "ComplexPair":
+        return ComplexPair(self.re.astype(dtype), self.im.astype(dtype))
+
+    # -- arithmetic (elementwise) --
+    def __add__(self, o: "ComplexPair") -> "ComplexPair":
+        return ComplexPair(self.re + o.re, self.im + o.im)
+
+    def __mul__(self, o):
+        if isinstance(o, ComplexPair):
+            # 4-mult complex product; accumulation in the inputs' dtype —
+            # contraction paths use f32 accumulation explicitly.
+            return ComplexPair(
+                self.re * o.re - self.im * o.im,
+                self.re * o.im + self.im * o.re,
+            )
+        return ComplexPair(self.re * o, self.im * o)
+
+    def conj(self) -> "ComplexPair":
+        return ComplexPair(self.re, -self.im)
+
+    def abs2(self) -> jnp.ndarray:
+        r = self.re.astype(jnp.float32)
+        i = self.im.astype(jnp.float32)
+        return r * r + i * i
+
+
+def quantize_complex(c: jnp.ndarray, dtype: Any) -> jnp.ndarray:
+    """Round-trip a complex64 tensor through a half-precision ComplexPair.
+
+    Models the representation (precision) error of storing spectral data at
+    half precision — this is exactly the error bounded by Theorem 3.2; used
+    at FFT boundaries where TPUs compute the transform in f32.
+    """
+    if dtype in (jnp.float32, None):
+        return c
+    pair = ComplexPair.from_complex(c, dtype)
+    return pair.to_complex()
+
+
+# ---------------------------------------------------------------------------
+# PrecisionPolicy — the explicit AMP replacement
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Where each class of op computes/stores, threaded explicitly.
+
+    Attributes:
+      name:            registry key.
+      param_dtype:     master weight storage (always f32 for training).
+      compute_dtype:   real-valued dense ops (the AMP-autocast set).
+      spectral_dtype:  FNO-block complex pipeline storage (the paper's
+                       contribution: fp16/bf16 here).  ``None`` => full f32
+                       complex (the "AMP leaves the FNO block in full
+                       precision" failure mode the paper identifies).
+      accum_dtype:     contraction accumulation (always f32: MXU-native).
+      stabilizer:      pre-FFT stabiliser name ('tanh' | 'hard_clip' |
+                       'sigma_clip' | None).  Paper: tanh whenever the
+                       forward FFT is half precision.
+      requires_loss_scaling: fp16 needs dynamic loss scaling; bf16 does not.
+    """
+
+    name: str
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    spectral_dtype: Optional[Any] = None
+    accum_dtype: Any = jnp.float32
+    stabilizer: Optional[str] = None
+    requires_loss_scaling: bool = False
+
+    # -- casting helpers -----------------------------------------------------
+    def cast_compute(self, tree):
+        """Cast a pytree of real arrays to the compute dtype."""
+        def _c(x):
+            if isinstance(x, jnp.ndarray) and jnp.issubdtype(x.dtype, jnp.floating):
+                return x.astype(self.compute_dtype)
+            return x
+        return jax.tree_util.tree_map(_c, tree)
+
+    def cast_spectral(self, c: jnp.ndarray):
+        """Enter the spectral pipeline: complex64 -> ComplexPair at the
+        spectral storage dtype (or stay complex64 for the full path)."""
+        if self.spectral_dtype is None:
+            return c
+        return ComplexPair.from_complex(c, self.spectral_dtype)
+
+    @property
+    def spectral_is_half(self) -> bool:
+        return self.spectral_dtype is not None
+
+    @property
+    def eps(self) -> float:
+        """Relative precision of the spectral dtype (for theory checks)."""
+        key = jnp.dtype(self.spectral_dtype).name if self.spectral_dtype is not None else "float32"
+        return FORMAT_EPS[key]
+
+
+# The paper's three headline settings + TPU-native variants + fp8 sim.
+FULL = PrecisionPolicy(name="full")
+AMP_FP16 = PrecisionPolicy(
+    name="amp_fp16", compute_dtype=jnp.float16, requires_loss_scaling=True
+)
+AMP_BF16 = PrecisionPolicy(name="amp_bf16", compute_dtype=jnp.bfloat16)
+MIXED_FNO_FP16 = PrecisionPolicy(
+    name="mixed_fno_fp16",
+    compute_dtype=jnp.float16,
+    spectral_dtype=jnp.float16,
+    stabilizer="tanh",
+    requires_loss_scaling=True,
+)
+MIXED_FNO_BF16 = PrecisionPolicy(
+    name="mixed_fno_bf16",
+    compute_dtype=jnp.bfloat16,
+    spectral_dtype=jnp.bfloat16,
+    stabilizer="tanh",
+)
+# FNO block half, rest full — the "Half-Prec FNO only" bar in Fig. 3.
+HALF_FNO_ONLY = PrecisionPolicy(
+    name="half_fno_only", spectral_dtype=jnp.float16, stabilizer="tanh",
+    requires_loss_scaling=True,
+)
+
+POLICIES = {
+    p.name: p
+    for p in [FULL, AMP_FP16, AMP_BF16, MIXED_FNO_FP16, MIXED_FNO_BF16, HALF_FNO_ONLY]
+}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown precision policy {name!r}; have {sorted(POLICIES)}")

@@ -1,0 +1,258 @@
+"""Mixed-precision Fourier convolution operator (paper Section 4.2, Fig. 2).
+
+The FNO layer computes ``(K v)(x) = iFFT( R · T_K( FFT v ) )(x)``.  The paper
+runs all three spectral stages — forward FFT, tensor contraction with the
+learnable ``R``, inverse FFT — at half precision (Table 4 shows the
+all-half setting wins on every metric), with a ``tanh`` pre-activation for
+stability and a memory-greedy contraction order.
+
+TPU adaptation (see DESIGN.md §2): XLA has no half-precision FFT on TPU, so
+the transform itself runs in f32 while inputs/outputs are **quantised to the
+half spectral dtype at the boundary** (``quantize_complex``).  This models
+the representation error bounded by Theorem 3.2 — the quantity the paper's
+theory actually analyses — and matches what the MXU pipeline does: bf16
+storage, f32 accumulation.  The contraction genuinely executes at half
+precision via split-real einsums (``core.contraction``), optionally through
+the Pallas kernel (``repro.kernels``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .contraction import contract
+from .precision import ComplexPair, PrecisionPolicy, FULL, quantize_complex
+from .stabilizer import get_stabilizer
+
+
+# ---------------------------------------------------------------------------
+# Weight initialisation (dense / CP / Tucker factorisations — TFNO)
+# ---------------------------------------------------------------------------
+
+
+def _n_corners(ndim: int) -> int:
+    # rfftn halves the last axis only; every other truncated axis keeps the
+    # low and high mode blocks => 2^(ndim-1) corner blocks.
+    return 2 ** (ndim - 1)
+
+
+def init_spectral_weights(
+    key: jax.Array,
+    in_channels: int,
+    out_channels: int,
+    modes: Sequence[int],
+    factorization: str = "dense",
+    rank: float = 0.5,
+) -> dict:
+    """Spectral weights R for one layer.
+
+    dense:  complex (corners, in, out, *modes), stored split-real f32.
+    cp:     Canonical-Polyadic factors (paper §4.6 uses CP for NS/Darcy):
+            weight[i,o,m1..md] = Σ_r λ_r A_i[i,r] A_o[o,r] Π_k A_mk[m_k,r].
+    tucker: core (r_i, r_o, r_m1..r_md) + factor matrices.
+    """
+    ndim = len(modes)
+    nc = _n_corners(ndim)
+    scale = 1.0 / (in_channels * out_channels)
+    if factorization == "dense":
+        shape = (nc, in_channels, out_channels, *modes)
+        k1, k2 = jax.random.split(key)
+        return {
+            "w_re": scale * jax.random.normal(k1, shape, jnp.float32),
+            "w_im": scale * jax.random.normal(k2, shape, jnp.float32),
+        }
+    if factorization == "cp":
+        r = max(1, int(rank * min(in_channels, out_channels) * 2))
+        keys = jax.random.split(key, 2 * (2 + ndim) + 2)
+        params = {}
+        params["lam_re"] = scale * jax.random.normal(keys[0], (nc, r), jnp.float32)
+        params["lam_im"] = scale * jax.random.normal(keys[1], (nc, r), jnp.float32)
+        dims = [in_channels, out_channels, *modes]
+        names = ["i", "o"] + [f"m{k}" for k in range(ndim)]
+        for idx, (nm, ddim) in enumerate(zip(names, dims)):
+            params[f"U_{nm}_re"] = jax.random.normal(
+                keys[2 + 2 * idx], (nc, ddim, r), jnp.float32
+            ) / math.sqrt(r)
+            params[f"U_{nm}_im"] = jax.random.normal(
+                keys[3 + 2 * idx], (nc, ddim, r), jnp.float32
+            ) / math.sqrt(r)
+        return params
+    if factorization == "tucker":
+        # ranks proportional to each dim
+        dims = [in_channels, out_channels, *modes]
+        ranks = [max(1, int(rank * d)) for d in dims]
+        keys = jax.random.split(key, 2 + 2 * len(dims))
+        params = {}
+        params["core_re"] = scale * jax.random.normal(keys[0], (nc, *ranks), jnp.float32)
+        params["core_im"] = scale * jax.random.normal(keys[1], (nc, *ranks), jnp.float32)
+        names = ["i", "o"] + [f"m{k}" for k in range(len(modes))]
+        for idx, (nm, ddim, rr) in enumerate(zip(names, dims, ranks)):
+            params[f"U_{nm}_re"] = jax.random.normal(
+                keys[2 + 2 * idx], (nc, ddim, rr), jnp.float32
+            ) / math.sqrt(rr)
+            params[f"U_{nm}_im"] = jax.random.normal(
+                keys[3 + 2 * idx], (nc, ddim, rr), jnp.float32
+            ) / math.sqrt(rr)
+        return params
+    raise ValueError(f"unknown factorization {factorization!r}")
+
+
+def spectral_param_count(params: dict) -> int:
+    return sum(
+        int(v.size) for k, v in params.items() if isinstance(v, jnp.ndarray)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mode-corner slicing
+# ---------------------------------------------------------------------------
+
+
+def _corner_slices(modes: Sequence[int], spectrum_shape: Sequence[int]):
+    """Slices selecting each retained corner of the (r)fft spectrum.
+
+    For every axis but the last we keep [:m] and [-m:]; the last (rfft) axis
+    keeps [:m] only.  Yields tuples of slices, one per corner, ordered so
+    that corner index bits map to axes (bit k set => high block on axis k).
+    """
+    ndim = len(modes)
+    nc = _n_corners(ndim)
+    out = []
+    for c in range(nc):
+        sl = []
+        for ax in range(ndim - 1):
+            m = modes[ax]
+            if (c >> ax) & 1:
+                sl.append(slice(spectrum_shape[ax] - m, spectrum_shape[ax]))
+            else:
+                sl.append(slice(0, m))
+        sl.append(slice(0, modes[-1]))
+        out.append(tuple(sl))
+    return out
+
+
+_EINSUM_SPATIAL = "xyzuvw"
+
+
+def _dense_expr(ndim: int) -> str:
+    sp = _EINSUM_SPATIAL[:ndim]
+    return f"bi{sp},io{sp}->bo{sp}"
+
+
+def _cp_exprs(ndim: int) -> str:
+    sp = _EINSUM_SPATIAL[:ndim]
+    mode_terms = ",".join(f"{ch}r" for ch in sp)
+    return f"bi{sp},r,ir,or,{mode_terms}->bo{sp}"
+
+
+def _tucker_expr(ndim: int) -> str:
+    sp = _EINSUM_SPATIAL[:ndim]
+    caps = "RSABCD"  # rank index letters: R=in-rank, S=out-rank, then modes
+    core = "RS" + caps[2 : 2 + ndim]
+    mode_terms = ",".join(f"{ch}{caps[2+k]}" for k, ch in enumerate(sp))
+    return f"bi{sp},{core},iR,oS,{mode_terms}->bo{sp}"
+
+
+def _kind(params: dict) -> str:
+    """Infer the factorisation kind from the parameter keys (the params
+    pytree must stay array-only so it is a valid grad/optimizer target)."""
+    if "w_re" in params:
+        return "dense"
+    if "lam_re" in params:
+        return "cp"
+    if "core_re" in params:
+        return "tucker"
+    raise ValueError(f"unrecognised spectral params: {sorted(params)}")
+
+
+def _corner_weight_ops(params: dict, corner: int, ndim: int):
+    """Return (expr_suffix_ops, expr) for one corner's contraction."""
+    kind = _kind(params)
+    if kind == "dense":
+        w = jax.lax.complex(params["w_re"][corner], params["w_im"][corner])
+        return [w], _dense_expr(ndim)
+    if kind == "cp":
+        ops = [jax.lax.complex(params["lam_re"][corner], params["lam_im"][corner])]
+        for nm in ["i", "o"] + [f"m{k}" for k in range(ndim)]:
+            ops.append(
+                jax.lax.complex(params[f"U_{nm}_re"][corner], params[f"U_{nm}_im"][corner])
+            )
+        return ops, _cp_exprs(ndim)
+    if kind == "tucker":
+        ops = [jax.lax.complex(params["core_re"][corner], params["core_im"][corner])]
+        for nm in ["i", "o"] + [f"m{k}" for k in range(ndim)]:
+            ops.append(
+                jax.lax.complex(params[f"U_{nm}_re"][corner], params[f"U_{nm}_im"][corner])
+            )
+        return ops, _tucker_expr(ndim)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def spectral_conv_apply(
+    params: dict,
+    x: jnp.ndarray,
+    modes: Sequence[int],
+    policy: PrecisionPolicy = FULL,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Apply the Fourier convolution to ``x`` of shape (batch, ch, *spatial).
+
+    Pipeline (Fig. 2): [stabiliser] -> FFT -> quantise -> truncate ->
+    contract (memory-greedy, split-real half) -> scatter -> dequantise ->
+    iFFT.  With ``policy.spectral_dtype is None`` this is the exact
+    full-precision FNO reference.
+    """
+    ndim = len(modes)
+    spatial = x.shape[2:]
+    assert len(spatial) == ndim, (x.shape, modes)
+    in_dtype = x.dtype
+
+    # 1. stabiliser before the forward FFT (only matters for half spectral)
+    if policy.spectral_is_half and policy.stabilizer:
+        x = get_stabilizer(policy.stabilizer)(x)
+
+    # 2. forward FFT in f32 (TPU has no half FFT); boundary quantisation
+    #    models the half representation per Thm 3.2.
+    xf = jnp.fft.rfftn(x.astype(jnp.float32), axes=tuple(range(2, 2 + ndim)))
+    if policy.spectral_is_half:
+        xf = quantize_complex(xf, policy.spectral_dtype)
+
+    spectrum_shape = xf.shape[2:]
+    corners = _corner_slices(modes, spectrum_shape)
+
+    out_channels = _out_channels(params)
+    out_f = jnp.zeros((x.shape[0], out_channels, *spectrum_shape), jnp.complex64)
+
+    for c, sl in enumerate(corners):
+        xc = xf[(slice(None), slice(None), *sl)]
+        ops, expr = _corner_weight_ops(params, c, ndim)
+        if use_pallas and _kind(params) == "dense":
+            from repro.kernels import ops as kops
+
+            yc = kops.spectral_contract(xc, ops[0], policy=policy)
+        else:
+            yc = contract(expr, xc, *ops, policy=policy)
+        if isinstance(yc, ComplexPair):
+            yc = yc.to_complex()
+        out_f = out_f.at[(slice(None), slice(None), *sl)].set(yc.astype(jnp.complex64))
+
+    # 3. inverse FFT back to physical space
+    y = jnp.fft.irfftn(out_f, s=spatial, axes=tuple(range(2, 2 + ndim)))
+    if policy.spectral_is_half:
+        # iFFT output also lives at half precision in the paper's pipeline
+        y = y.astype(policy.spectral_dtype)
+    return y.astype(in_dtype)
+
+
+def _out_channels(params: dict) -> int:
+    if _kind(params) == "dense":
+        return params["w_re"].shape[2]
+    return params["U_o_re"].shape[1]

@@ -1,0 +1,59 @@
+"""Pre-FFT numerical stabilisers (paper Section 4.3, Appendix B.5/B.6).
+
+Naïve half-precision FNO overflows (NaN) on every dataset the paper tries.
+Global (post-forward) remedies — loss scaling, gradient clipping, delayed
+updates — all diverge (Fig. 10) because they never touch the forward FFT
+overflow inside the FNO block.  The fix is a *local* pre-activation before
+each forward FFT; ``tanh`` wins (Table 3): it is ~identity near 0, smooth,
+and provably shrinks both the sup-norm M and the Lipschitz constant L that
+appear in the Theorem 3.1/3.2 bounds — so it tightens the very quantities
+the theory says control the error.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+
+def tanh_stabilizer(x: jnp.ndarray) -> jnp.ndarray:
+    """The paper's choice.  |tanh(x)| <= 1 bounds the FFT input so the half
+    dynamic range (65504 for fp16) can never overflow; near 0 it is the
+    identity so small signals are untouched."""
+    return jnp.tanh(x)
+
+
+def hard_clip_stabilizer(x: jnp.ndarray, limit: float = 3.0) -> jnp.ndarray:
+    """hard-clip baseline from Table 3."""
+    return jnp.clip(x, -limit, limit)
+
+
+def sigma_clip_stabilizer(x: jnp.ndarray, k: float = 2.0) -> jnp.ndarray:
+    """2σ-clip baseline from Table 3: clip to mean ± k·std (per sample)."""
+    axes = tuple(range(1, x.ndim))
+    mu = jnp.mean(x, axis=axes, keepdims=True)
+    sd = jnp.std(x, axis=axes, keepdims=True)
+    return jnp.clip(x, mu - k * sd, mu + k * sd)
+
+
+def fixed_scale_stabilizer(x: jnp.ndarray, divisor: float = 10.0) -> jnp.ndarray:
+    """Pointwise division baseline (Appendix B.6) — shown to squash normal
+    data into a range half precision cannot distinguish; kept for ablations."""
+    return x / divisor
+
+
+STABILIZERS = {
+    None: lambda x: x,
+    "none": lambda x: x,
+    "tanh": tanh_stabilizer,
+    "hard_clip": hard_clip_stabilizer,
+    "sigma_clip": sigma_clip_stabilizer,
+    "fixed_scale": fixed_scale_stabilizer,
+}
+
+
+def get_stabilizer(name: Optional[str]) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    try:
+        return STABILIZERS[name]
+    except KeyError:
+        raise KeyError(f"unknown stabilizer {name!r}; have {sorted(k for k in STABILIZERS if k)}")

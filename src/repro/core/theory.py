@@ -1,0 +1,152 @@
+"""Empirical estimators and bounds for the paper's theory (Section 3, App. A).
+
+* ``disc_error``  — Eq. (1): |∫_D v φ_ω dx − Σ_j v(ξ_j) φ_ω(ξ_j) |Q_j||,
+  the discretisation error of the Fourier transform on the lattice Q_d.
+* ``prec_error``  — Eq. (2): the additional error from evaluating the sum
+  with quantised values q(v(ξ)) q(φ(ξ)).
+* Closed-form worst-case bounds:
+    Thm 3.1:  c1 √d M n^{-2/d}  <=  sup Disc  <=  c2 √d (|ω|+L) M n^{-1/d}
+    Thm 3.2:  sup Prec <= c ε M            (c = 4 in the paper's proof)
+    Thm A.1/A.2: analogous bounds for general (non-Fourier) integrands.
+
+The benchmark ``benchmarks/bench_theory.py`` reproduces Fig. 7 by plotting
+these bounds against measured errors on Darcy-flow-like fields.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .precision import PrecisionSystem, precision_system_for
+
+
+# ---------------------------------------------------------------------------
+# Lattice construction:  Q_d with n = m^d cells, ξ_j = lower corner of Q_j
+# ---------------------------------------------------------------------------
+
+
+def lattice(m: int, d: int) -> np.ndarray:
+    """Return the (m^d, d) array of ξ_j = (i_1/m, ..., i_d/m)."""
+    axes = [np.arange(m) / m for _ in range(d)]
+    grid = np.meshgrid(*axes, indexing="ij")
+    return np.stack([g.reshape(-1) for g in grid], axis=-1)
+
+
+def fourier_basis(xi: np.ndarray, omega: float) -> np.ndarray:
+    """φ_ω(x) = exp(2πi <ω·1, x>) with scalar frequency applied isotropically."""
+    phase = 2.0 * math.pi * omega * xi.sum(axis=-1)
+    return np.exp(1j * phase)
+
+
+# ---------------------------------------------------------------------------
+# Empirical errors
+# ---------------------------------------------------------------------------
+
+
+def riemann_sum(v: Callable[[np.ndarray], np.ndarray], m: int, d: int, omega: float) -> complex:
+    xi = lattice(m, d)
+    vals = v(xi) * fourier_basis(xi, omega)
+    return complex(vals.sum() / (m ** d))
+
+
+def disc_error(
+    v: Callable[[np.ndarray], np.ndarray],
+    m: int,
+    d: int,
+    omega: float,
+    ref_multiplier: int = 8,
+) -> float:
+    """Eq. (1), with the true integral estimated on an 8x finer lattice."""
+    coarse = riemann_sum(v, m, d, omega)
+    fine = riemann_sum(v, m * ref_multiplier, d, omega)
+    return abs(fine - coarse)
+
+
+def prec_error(
+    v: Callable[[np.ndarray], np.ndarray],
+    m: int,
+    d: int,
+    omega: float,
+    q: Optional[PrecisionSystem] = None,
+    dtype: str = "float16",
+) -> float:
+    """Eq. (2): quantise both v(ξ) and φ_ω(ξ) then compare the sums.
+
+    With ``q=None`` the quantiser is the actual numpy cast to ``dtype``
+    (the "true difference in precision between float32 and float16" used in
+    the paper's Fig. 7)."""
+    xi = lattice(m, d)
+    vals = v(xi).astype(np.float64)
+    phi = fourier_basis(xi, omega)
+    exact = (vals * phi).sum() / (m ** d)
+    if q is not None:
+        qv = np.asarray(jax.device_get(q.quantize(jnp.asarray(vals))))
+        qpr = np.asarray(jax.device_get(q.quantize(jnp.asarray(phi.real))))
+        qpi = np.asarray(jax.device_get(q.quantize(jnp.asarray(phi.imag))))
+    else:
+        dt = np.dtype(dtype)
+        qv = vals.astype(dt).astype(np.float64)
+        qpr = phi.real.astype(dt).astype(np.float64)
+        qpi = phi.imag.astype(dt).astype(np.float64)
+    approx = (qv * (qpr + 1j * qpi)).sum() / (m ** d)
+    return abs(exact - approx)
+
+
+# ---------------------------------------------------------------------------
+# Closed-form bounds
+# ---------------------------------------------------------------------------
+
+
+def disc_upper_bound(n: int, d: int, omega: float, L: float, M: float, c2: float = 2.0) -> float:
+    """Thm 3.1 upper: c2 √d (M|ω| + L) n^{-1/d}."""
+    return c2 * math.sqrt(d) * (M * abs(omega) + L) * n ** (-1.0 / d)
+
+
+def disc_lower_bound(n: int, d: int, M: float, c1: float = None) -> float:
+    """Thm 3.1 lower (ω=1, v = x_1···x_d): d/(3·2^d·π^{d-2}) · n^{-2/d}·M."""
+    if c1 is None:
+        c1 = d / (3.0 * 2 ** d * math.pi ** (d - 2))
+    return c1 * M * n ** (-2.0 / d)
+
+
+def prec_upper_bound(eps: float, M: float, c: float = 4.0) -> float:
+    """Thm 3.2: c · ε · M  (paper's proof gives c = 4)."""
+    return c * eps * M
+
+
+def prec_lower_bound(eps: float, M: float) -> float:
+    """Thm A.2 lower: ε M / 4."""
+    return 0.25 * eps * M
+
+
+def general_disc_upper_bound(n: int, d: int, L: float) -> float:
+    """Thm A.1 upper: L √d n^{-1/d}."""
+    return L * math.sqrt(d) * n ** (-1.0 / d)
+
+
+def crossover_mesh_size(eps: float, d: int, M: float = 1.0, L: float = 1.0, omega: float = 1.0) -> float:
+    """Mesh size n* where the discretisation upper bound falls to the
+    precision bound: below n* half precision is 'free'.  The paper quotes
+    n* ~ 1e6 for d=3, fp16 (ε≈1e-4)."""
+    # c2 √d (M|ω|+L) n^{-1/d} = 4 ε M   =>  n* = (c2 √d (M|ω|+L) / (4εM))^d
+    c2 = 2.0
+    return (c2 * math.sqrt(d) * (M * abs(omega) + L) / (4.0 * eps * M)) ** d
+
+
+# Convenience: Lipschitz/M estimation on sampled fields (for Fig. 7 with
+# real Darcy data where L and M must be measured).
+
+
+def estimate_lipschitz_and_bound(field: np.ndarray) -> tuple:
+    """Given a sampled field on a uniform grid (any d), estimate (L, M)."""
+    M = float(np.abs(field).max())
+    L = 0.0
+    for ax in range(field.ndim):
+        diff = np.abs(np.diff(field, axis=ax)) * field.shape[ax]
+        if diff.size:
+            L = max(L, float(diff.max()))
+    return L, M

@@ -1,0 +1,8 @@
+"""Data substrate: PDE solvers + synthetic streams, all in JAX/numpy."""
+from .grf import grf_2d, grf_sphere  # noqa: F401
+from .darcy import sample_darcy_batch, solve_darcy  # noqa: F401
+from .navier_stokes import sample_ns_batch, solve_ns_vorticity  # noqa: F401
+from .swe import sample_swe_batch, solve_swe_linear  # noqa: F401
+from .carshapes import sample_car_batch, latent_grid_coords  # noqa: F401
+from .tokens import lm_inputs, token_batch  # noqa: F401
+from .loader import CachedDataset, StatelessLoader  # noqa: F401

@@ -1,0 +1,94 @@
+"""Synthetic Shape-Net-Car-like CFD dataset for GINO (paper §B.2).
+
+Each sample is a random superellipsoid "car body" surface point cloud with
+a potential-flow surface-pressure label (the classic sphere/ellipsoid
+coefficient C_p = 1 - 9/4 sin²θ generalised to the local surface normal
+against the inlet direction).  The data pipeline also precomputes the
+fixed-k neighbour candidate lists + radius masks that GINO's JAX port
+consumes (DESIGN.md §7), using brute-force numpy KNN — this runs once per
+sample at generation time, off the training hot path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _superellipsoid_points(rng: np.random.RandomState, n_points: int):
+    """Sample surface points + outward normals of a random superellipsoid
+    centred in [0,1]^3."""
+    e1 = rng.uniform(0.6, 1.4)
+    e2 = rng.uniform(0.6, 1.4)
+    ax = np.array([rng.uniform(0.30, 0.42), rng.uniform(0.14, 0.22), rng.uniform(0.10, 0.18)])
+    theta = np.arccos(rng.uniform(-1, 1, n_points))
+    phi = rng.uniform(0, 2 * np.pi, n_points)
+
+    def sgnpow(x, p):
+        return np.sign(x) * np.abs(x) ** p
+
+    x = ax[0] * sgnpow(np.sin(theta), e1) * sgnpow(np.cos(phi), e2)
+    y = ax[1] * sgnpow(np.sin(theta), e1) * sgnpow(np.sin(phi), e2)
+    z = ax[2] * sgnpow(np.cos(theta), e1)
+    pts = np.stack([x, y, z], axis=-1)
+    # normals ∝ gradient of the implicit function; approximate by the
+    # ellipsoidal normal (adequate for labels/features)
+    normals = pts / (ax ** 2)
+    normals /= np.linalg.norm(normals, axis=-1, keepdims=True) + 1e-9
+    pts = pts + 0.5  # centre in unit cube
+    return pts.astype(np.float32), normals.astype(np.float32)
+
+
+def _pressure_label(normals: np.ndarray, inlet=np.array([1.0, 0.0, 0.0])):
+    """Potential-flow-style C_p from the angle between surface normal and
+    the inlet direction: C_p = 1 - 9/4 sin²θ (sphere potential flow)."""
+    c = normals @ inlet
+    s2 = 1.0 - c ** 2
+    return (1.0 - 2.25 * s2).astype(np.float32)[:, None]
+
+
+def _knn(src: np.ndarray, dst: np.ndarray, k: int, radius: float):
+    """For each dst point: indices of k nearest src points + radius mask."""
+    d2 = ((dst[:, None, :] - src[None, :, :]) ** 2).sum(-1)
+    idx = np.argsort(d2, axis=1)[:, :k]
+    dist = np.sqrt(np.take_along_axis(d2, idx, axis=1))
+    mask = (dist <= radius).astype(np.float32)
+    # always keep at least the nearest neighbour
+    mask[:, 0] = 1.0
+    return idx.astype(np.int32), mask
+
+
+def latent_grid_coords(G: int) -> np.ndarray:
+    t = np.linspace(0.0, 1.0, G)
+    gx, gy, gz = np.meshgrid(t, t, t, indexing="ij")
+    return np.stack([gx, gy, gz], axis=-1).reshape(-1, 3).astype(np.float32)
+
+
+def sample_car_batch(
+    seed: int,
+    batch: int,
+    n_points: int = 256,
+    latent_grid: int = 8,
+    k: int = 8,
+    radius: float = 0.35,
+):
+    """Returns (batch_dict, labels).  batch_dict matches gino_apply."""
+    rng = np.random.RandomState(seed)
+    lat = latent_grid_coords(latent_grid)
+    out = {
+        "points": [], "feats": [], "enc_idx": [], "enc_mask": [],
+        "query": [], "dec_idx": [], "dec_mask": [],
+    }
+    labels = []
+    for _ in range(batch):
+        pts, normals = _superellipsoid_points(rng, n_points)
+        enc_idx, enc_mask = _knn(pts, lat, k, radius)
+        dec_idx, dec_mask = _knn(lat, pts, k, radius)
+        out["points"].append(pts)
+        out["feats"].append(normals[:, :1])  # inlet-aligned normal component
+        out["enc_idx"].append(enc_idx)
+        out["enc_mask"].append(enc_mask)
+        out["query"].append(pts)
+        out["dec_idx"].append(dec_idx)
+        out["dec_mask"].append(dec_mask)
+        labels.append(_pressure_label(normals))
+    batch_dict = {kk: np.stack(v) for kk, v in out.items()}
+    return batch_dict, np.stack(labels)

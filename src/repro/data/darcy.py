@@ -1,0 +1,62 @@
+"""Darcy flow dataset: -∇·(a(x)∇u(x)) = f, u|∂D = 0  (paper §B.2).
+
+Coefficients a(x) are piecewise-constant pushforwards of a GRF (12 where
+the GRF is positive, 3 elsewhere — the Li et al. 2021 construction), the
+forcing is f ≡ 1, and the solution is computed in JAX with conjugate
+gradients on the 5-point finite-difference operator with harmonic-mean
+face coefficients.  Everything is jit-able and runs on device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .grf import grf_2d
+
+
+def _face_harmonic(a: jnp.ndarray, axis: int) -> jnp.ndarray:
+    a0 = jax.lax.slice_in_dim(a, 0, a.shape[axis] - 1, axis=axis)
+    a1 = jax.lax.slice_in_dim(a, 1, a.shape[axis], axis=axis)
+    return 2.0 * a0 * a1 / (a0 + a1)
+
+
+def darcy_matvec(a: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Apply A = -∇·(a∇·) to interior field u (n, n); Dirichlet boundary."""
+    n = u.shape[-1]
+    h = 1.0 / (n + 1)
+    up = jnp.pad(u, ((1, 1), (1, 1)))
+    ap = jnp.pad(a, ((1, 1), (1, 1)), mode="edge")
+    ax = _face_harmonic(ap, 0)  # (n+1, n+2) faces along x
+    ay = _face_harmonic(ap, 1)  # (n+2, n+1)
+    # flux divergence
+    fx = ax * (up[1:, :] - up[:-1, :])  # (n+1, n+2)
+    fy = ay * (up[:, 1:] - up[:, :-1])  # (n+2, n+1)
+    div = (fx[1:, 1:-1] - fx[:-1, 1:-1]) + (fy[1:-1, 1:] - fy[1:-1, :-1])
+    return -div / (h * h)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "maxiter"))
+def solve_darcy(a: jnp.ndarray, n: int, maxiter: int = 500) -> jnp.ndarray:
+    """CG-solve -∇·(a∇u) = 1 for one coefficient field a (n, n)."""
+    f = jnp.ones((n, n), jnp.float32)
+    op = lambda u: darcy_matvec(a, u)
+    u, _ = jax.scipy.sparse.linalg.cg(op, f, tol=1e-6, maxiter=maxiter)
+    return u
+
+
+def sample_darcy_batch(key: jax.Array, n: int, batch: int, maxiter: int = 500):
+    """Returns (a, u): coefficients (B, 1, n, n) and solutions (B, 1, n, n).
+
+    Both channels are whitened to O(1) — the standard neuraloperator
+    preprocessing the paper inherits.  This matters for mixed precision:
+    the tanh stabiliser is ~identity near 0 but *saturates* on the raw
+    piecewise-{3,12} coefficients, collapsing the spectral-path signal
+    (found empirically — EXPERIMENTS.md §Perf notes)."""
+    g = grf_2d(key, n, alpha=2.0, tau=3.0, batch=batch)
+    a = jnp.where(g > 0, 12.0, 3.0).astype(jnp.float32)
+    u = jax.vmap(lambda ai: solve_darcy(ai, n, maxiter))(a)
+    a = (a - 7.5) / 4.5          # whiten {3,12} -> {-1,+1}
+    u = (u - 5e-3) / 5e-3        # interior solution scale for f≡1
+    return a[:, None], u[:, None]

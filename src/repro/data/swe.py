@@ -1,0 +1,96 @@
+"""Spherical shallow-water dataset (paper §B.2, Bonev et al. 2023 style).
+
+We integrate the *linearised* rotating shallow-water equations on the
+sphere (gravity-wave dynamics about a state of rest):
+
+    ∂φ/∂t = -Φ̄ ∇·u
+    ∂u/∂t = -∇φ - f k̂×u,       f = 2Ω sin(lat)
+
+on the Gauss-Legendre lat-lon grid with spectral (SHT) hyperdiffusion
+filtering each step for stability.  Random smooth initial geopotential
+fields are synthesised from low-degree spherical-harmonic coefficients
+(`grf_sphere`) — the learning task is φ(0) ↦ (φ, u, v)(T), matching the
+SWE-on-the-fly-random-ICs protocol of the paper.  (Full nonlinear SWE is a
+documented simplification — DESIGN.md §7.)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grf import grf_sphere
+from repro.models.sht import legendre_matrices, sht_forward, sht_inverse
+
+
+def _grid(nlat: int, nlon: int):
+    _, x, _ = legendre_matrices(nlat, 8, 8)
+    lat = np.arcsin(np.clip(x, -1, 1))  # Gauss-Legendre latitudes
+    lon = np.linspace(0, 2 * math.pi, nlon, endpoint=False)
+    return jnp.asarray(lat, jnp.float32), jnp.asarray(lon, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("nlat", "nlon", "steps", "lmax"))
+def solve_swe_linear(
+    phi0: jnp.ndarray,
+    nlat: int,
+    nlon: int,
+    steps: int = 200,
+    dt: float = 150.0,
+    phibar: float = 3.0e4,
+    omega: float = 7.292e-5,
+    radius: float = 6.371e6,
+    lmax: int = 24,
+):
+    """phi0: (nlat, nlon) geopotential anomaly. Returns (phi, u, v) at T."""
+    lmax = min(lmax, nlat, nlon // 2 + 1)
+    lat, lon = _grid(nlat, nlon)
+    coslat = jnp.cos(lat)[:, None]
+    fcor = 2.0 * omega * jnp.sin(lat)[:, None]
+    dlon = 2.0 * math.pi / nlon
+
+    def ddlon(a):
+        return (jnp.roll(a, -1, axis=1) - jnp.roll(a, 1, axis=1)) / (2 * dlon)
+
+    def ddlat(a):
+        # non-uniform Gauss latitudes: central differences w/ one-sided ends
+        d = jnp.gradient(a, axis=0) / jnp.gradient(lat)[:, None]
+        return d
+
+    def filt(a):
+        c = sht_forward(a, lmax, lmax)
+        l = jnp.arange(lmax)[:, None]
+        damp = jnp.exp(-1e-2 * (l / lmax) ** 4 * 16)
+        return sht_inverse(c * damp, nlat, nlon)
+
+    def step(state, _):
+        phi, u, v = state
+        div = (ddlon(u) / coslat + ddlat(v * coslat) / coslat) / radius
+        dphix = ddlon(phi) / (radius * coslat)
+        dphiy = ddlat(phi) / radius
+        phi_n = phi - dt * phibar * div
+        u_n = u + dt * (-dphix + fcor * v)
+        v_n = v + dt * (-dphiy - fcor * u)
+        return (filt(phi_n), filt(u_n), filt(v_n)), None
+
+    state0 = (phi0, jnp.zeros_like(phi0), jnp.zeros_like(phi0))
+    (phi, u, v), _ = jax.lax.scan(step, state0, None, length=steps)
+    return phi, u, v
+
+
+def sample_swe_batch(key: jax.Array, nlat: int, nlon: int, batch: int, steps: int = 200):
+    """Returns (x, y): inputs (B, 3, nlat, nlon) = (φ0, 0, 0) and targets
+    (B, 3, nlat, nlon) = (φ, u, v)(T)."""
+    phi0 = grf_sphere(key, nlat, nlon, lmax=min(16, nlat // 2), batch=batch)
+    phi0 = phi0 * 1e2  # geopotential anomaly scale (m²/s²)
+    outs = jax.vmap(
+        lambda p: solve_swe_linear(p, nlat, nlon, steps=steps)
+    )(phi0)
+    x = jnp.stack([phi0, jnp.zeros_like(phi0), jnp.zeros_like(phi0)], axis=1)
+    y = jnp.stack(outs, axis=1)
+    # normalise channels to O(1)
+    scale = jnp.asarray([1e2, 1.0, 1.0])[None, :, None, None]
+    return x / 1e2, y / scale

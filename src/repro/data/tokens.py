@@ -1,0 +1,52 @@
+"""Synthetic token streams for the LM architecture pool.
+
+Stateless by construction: every (seed, step, position) maps to a token
+through a counter-based PRNG (jax.random.fold_in), so the pipeline needs
+no iterator state — restart-after-failure resumes bit-identically from the
+step number alone (the fault-tolerance property DESIGN.md §4 relies on).
+
+Tokens follow a Zipf-like marginal with short-range Markov structure so
+perplexity is learnable (a pure-uniform stream has nothing to learn).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "seq_len", "vocab"))
+def token_batch(
+    seed: int | jax.Array,
+    step: int | jax.Array,
+    batch: int,
+    seq_len: int,
+    vocab: int,
+) -> dict:
+    """Deterministic batch at (seed, step): {'tokens': (B, S+1) int32}."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    kz, km = jax.random.split(key)
+    # Zipf-ish marginal: map uniform -> vocab^(u) indices
+    u = jax.random.uniform(kz, (batch, seq_len + 1))
+    zipf = jnp.floor(vocab ** u) - 1.0
+    base = jnp.clip(zipf, 0, vocab - 1).astype(jnp.int32)
+    # short-range structure: with p=0.3 repeat the previous token + 1
+    rep = jax.random.bernoulli(km, 0.3, (batch, seq_len + 1))
+
+    def mix(prev, inp):
+        tok, r = inp
+        out = jnp.where(r, (prev + 1) % vocab, tok)
+        return out, out
+
+    _, toks = jax.lax.scan(
+        mix, base[:, 0], (base.T, rep.T)
+    )
+    toks = jnp.swapaxes(toks, 0, 1)
+    return {"tokens": toks}
+
+
+def lm_inputs(seed, step, batch, seq_len, vocab):
+    """Training view: inputs = tokens[:-1], labels = tokens[1:]."""
+    b = token_batch(seed, step, batch, seq_len, vocab)["tokens"]
+    return {"tokens": b[:, :-1], "labels": b[:, 1:]}

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+  spectral_contract — the paper's hot-spot: complex spectral tensor
+                      contraction in split-real half precision, f32 MXU
+                      accumulation (Appendix B.4 / Table 8 Option C).
+  flash_attention   — blocked online-softmax attention for the 32k-token
+                      prefill cells of the LM architecture pool.
+  rmsnorm           — bandwidth-bound normalisation, f32 reduction.
+
+Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), a jit'd wrapper in
+``ops.py``, and a pure-jnp oracle in ``ref.py``.  On this CPU container all
+kernels run (and are tested) in interpret mode; on TPU the identical call
+sites compile to Mosaic.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,86 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the model code calls.  They handle:
+  * complex <-> split-real conversion at the policy's spectral dtype,
+  * mode flattening / padding,
+  * interpret-mode selection (CPU container validates kernels in interpret
+    mode; on TPU the same call compiles to Mosaic),
+  * falling back shapes that the kernels don't support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import ComplexPair, PrecisionPolicy, FULL
+from .spectral_contract import spectral_contract_pallas, vmem_bytes
+from .flash_attention import flash_attention as _flash
+from .rmsnorm import rmsnorm as _rmsnorm
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spectral_contract(
+    x, w, *, policy: PrecisionPolicy = FULL, block_m: int = 64
+):
+    """Dense spectral contraction ``bi<modes>,io<modes>->bo<modes>``.
+
+    ``x``: complex64 or ComplexPair, shape (B, I, *modes);
+    ``w``: complex64 (the layer's dense corner weight), shape (I, O, *modes).
+    Returns the same kind as ``x`` (ComplexPair under a half policy).
+    """
+    half = policy.spectral_dtype or jnp.float32
+    was_pair = isinstance(x, ComplexPair)
+    if not was_pair:
+        x = ComplexPair.from_complex(x, half)
+    wp = ComplexPair.from_complex(w, half) if not isinstance(w, ComplexPair) else w
+
+    B, I, *modes = x.re.shape
+    I2, O, *modes2 = wp.re.shape
+    assert tuple(modes) == tuple(modes2) and I == I2, (x.re.shape, wp.re.shape)
+    M = 1
+    for m in modes:
+        M *= m
+
+    xr = x.re.reshape(B, I, M)
+    xi = x.im.reshape(B, I, M)
+    wr = wp.re.reshape(I, O, M)
+    wi = wp.im.reshape(I, O, M)
+
+    out_re, out_im = spectral_contract_pallas(
+        xr, xi, wr, wi, block_m=block_m, interpret=_use_interpret(),
+        out_dtype=half,
+    )
+    pair = ComplexPair(
+        out_re.reshape(B, O, *modes), out_im.reshape(B, O, *modes)
+    )
+    if was_pair and policy.spectral_is_half:
+        return pair
+    return pair.to_complex()
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
+    """(B, H, S, D) attention; flattens heads into the grid batch axis."""
+    B, H, S, D = q.shape
+    Sk = k.shape[2]
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, Sk, D)
+    vf = v.reshape(B * H, Sk, D)
+    out = _flash(
+        qf, kf, vf, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=_use_interpret(),
+    )
+    return out.reshape(B, H, S, D)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
+    """Rank-agnostic RMSNorm over the last axis."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    out = _rmsnorm(flat, w, eps=eps, block_rows=block_rows, interpret=_use_interpret())
+    return out.reshape(shape)
+
+
+__all__ = ["spectral_contract", "flash_attention", "rmsnorm", "vmem_bytes"]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` computes the mathematically exact (f32/complex64) result the
+kernel must match to within the storage-precision tolerance.  Tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spectral_contract_ref(
+    x: jnp.ndarray, w: jnp.ndarray
+) -> jnp.ndarray:
+    """Oracle for the spectral contraction.
+
+    x: (B, I, M) complex64; w: (I, O, M) complex64 -> (B, O, M) complex64.
+    """
+    return jnp.einsum("bim,iom->bom", x, w)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True
+) -> jnp.ndarray:
+    """Oracle softmax attention. q/k/v: (BH, S, D)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    if causal:
+        S, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) cell, on the single-pod 16×16 mesh
+and the 2×16×16 multi-pod mesh:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(…)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+Results append to benchmarks/results/dryrun.json so interrupted sweeps
+resume.  Failures here (sharding mismatch, OOM at compile, unsupported
+collective) are bugs in the system — not acceptable skips.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
+from repro.dist.sharding import (
+    batch_specs,
+    cache_specs,
+    lm_param_specs,
+    replication_report,
+    to_named,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import CollectiveStats, analyze_counts, model_flops, parse_hlo
+from repro.launch.steps import build_step
+from repro.optim import AdamWState
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun.json")
+
+
+def _opt_specs(opt_shape: AdamWState, param_specs):
+    return AdamWState(count=P(), mu=param_specs, nu=param_specs)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             policy_name: str = "amp_bf16", verbose: bool = True) -> dict:
+    from repro.core import get_policy
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "policy": policy_name}
+
+    ok, reason = cell_is_runnable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = build_step(cfg, shape, get_policy(policy_name))
+    param_specs = lm_param_specs(bundle.params_shape, mesh)
+    p_named = to_named(mesh, param_specs)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_shape = bundle.extra_state_shape["opt_state"]
+            opt_named = to_named(mesh, _opt_specs(opt_shape, param_specs))
+            b_named = to_named(mesh, batch_specs(bundle.inputs["batch"], mesh))
+            jitted = jax.jit(
+                bundle.step_fn,
+                in_shardings=(p_named, opt_named, b_named),
+                out_shardings=(p_named, opt_named, NamedSharding(mesh, P())),
+            )
+            lowered = jitted.lower(bundle.params_shape, opt_shape,
+                                   bundle.inputs["batch"])
+        elif shape.kind == "prefill":
+            b_named = to_named(mesh, batch_specs(bundle.inputs["batch"], mesh))
+            jitted = jax.jit(
+                bundle.step_fn, in_shardings=(p_named, b_named),
+            )
+            lowered = jitted.lower(bundle.params_shape, bundle.inputs["batch"])
+        else:  # decode
+            c_named = to_named(mesh, cache_specs(bundle.inputs["cache"], mesh, cfg))
+            t_named = to_named(mesh, batch_specs(bundle.inputs["tokens"], mesh))
+            jitted = jax.jit(
+                bundle.step_fn,
+                in_shardings=(p_named, c_named, t_named),
+                out_shardings=(None, c_named),
+            )
+            lowered = jitted.lower(bundle.params_shape, bundle.inputs["cache"],
+                                   bundle.inputs["tokens"])
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    counts = parse_hlo(hlo)   # trip-count-aware FLOPs/bytes/collectives
+    n_dev = mesh.devices.size
+    roof = analyze_counts(counts, n_dev)
+
+    # MODEL_FLOPS (6·N·D) vs compiled useful-compute ratio
+    if shape.kind == "train":
+        tokens = shape.global_batch * (cfg.max_dec_len if cfg.encoder_decoder
+                                       else shape.seq_len)
+        mf = model_flops(cfg.active_params_approx(), tokens)  # 6ND = fwd+bwd
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 2.0 * cfg.active_params_approx() * tokens
+    else:
+        tokens = shape.global_batch  # one token per slot
+        mf = 2.0 * cfg.active_params_approx() * tokens
+
+    global_flops = roof.flops_per_device * n_dev
+    rec.update({
+        "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        "n_devices": n_dev,
+        "memory_analysis": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_analysis_raw": {k: cost.get(k) for k in
+                          ("flops", "bytes accessed", "transcendentals")
+                          if k in cost},
+        "collective_bytes_by_kind": counts.collective_by_kind,
+        "roofline": roof.to_dict(),
+        "model_flops_6nd": mf,
+        "useful_flops_ratio": (mf / global_flops) if global_flops else None,
+        "replication": replication_report(
+            bundle.params_shape, lm_param_specs(bundle.params_shape, mesh)),
+    })
+    if verbose:
+        print(f"== {bundle.description} on {mesh_name} ==")
+        print("memory_analysis:", rec["memory_analysis"])
+        print("cost_analysis (raw, loop bodies once):", rec["cost_analysis_raw"])
+        print("collectives:", counts.collective_by_kind)
+        print("roofline:", json.dumps(rec["roofline"], indent=2))
+    return rec
+
+
+def load_results(path=RESULTS):
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return []
+
+
+def save_result(rec: dict, path=RESULTS):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    results = load_results(path)
+    results = [r for r in results
+               if not (r["arch"] == rec["arch"] and r["shape"] == rec["shape"]
+                       and r["mesh"] == rec["mesh"] and r.get("policy") == rec.get("policy"))]
+    results.append(rec)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--policy", default="amp_bf16")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("policy")) for r in load_results()
+            if r.get("status") in ("ok", "skipped")} if args.skip_done else set()
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape, mesh_name, args.policy) in done:
+                    print(f"-- {arch} {shape} {mesh_name}: already done")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mp, args.policy)
+                except Exception as e:  # a failure here is a bug
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "policy": args.policy,
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                    failures.append(rec)
+                save_result(rec)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f["arch"], f["shape"], f["mesh"], f["error"][:120])
+        raise SystemExit(1)
+    print("\nall requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

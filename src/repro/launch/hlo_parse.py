@@ -1,0 +1,312 @@
+"""Trip-count-aware HLO cost parser.
+
+``compiled.cost_analysis()`` counts each while-loop body once (verified in
+tests/test_roofline.py), which is useless for scan-over-layers models, so
+we parse the post-SPMD HLO text ourselves:
+
+  * per-computation symbol tables (%value -> type) because operand
+    references in scheduled HLO are untyped;
+  * dot FLOPs = 2·|out|·K with K read from lhs_contracting_dims and the
+    lhs operand's recorded shape;
+  * HBM bytes at fusion granularity; dynamic-update-slice (and DUS-rooted
+    fusions — the scan carry writes) count the updated *slice*, not the
+    whole carry buffer (XLA updates in place);
+  * collective bytes = output bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute;
+  * while bodies scale by the loop trip count extracted from the largest
+    sane comparison constant in the loop condition.
+
+Everything is per-device (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([\d,]*)\]"
+)
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "copy-start", "copy-done", "get-dimension-size", "add-dependency",
+    "opt-barrier",
+}
+_MAX_SANE_TRIPS = 1_000_000
+
+
+def _type_bytes(typ: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(typ):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _type_dims(typ: str) -> List[int]:
+    m = _SHAPE_RE.search(typ)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    typ: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+def _parse_def(ln: str) -> Optional[_Op]:
+    m = re.match(r"\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$", ln)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2).strip()
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        typ, rest2 = rest[: end + 1], rest[end + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        typ, rest2 = rest[:sp], rest[sp + 1:].strip()
+    mo = re.match(r"([\w\-]+)\(", rest2)
+    if not mo:
+        return None
+    op = mo.group(1)
+    # operand names inside the op's balanced parens
+    depth = 0
+    start = rest2.find("(")
+    end = start
+    for i in range(start, len(rest2)):
+        if rest2[i] == "(":
+            depth += 1
+        elif rest2[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = re.findall(r"%([\w\.\-]+)", rest2[start:end + 1])
+    return _Op(name=name, typ=typ, op=op, operands=operands, line=ln)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[_Op]
+    sym: Dict[str, str]          # value name -> type string
+    root: Optional[_Op]
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[str] = None
+    ops: List[_Op] = []
+    root: Optional[_Op] = None
+    for raw in hlo.splitlines():
+        bare = raw.strip()
+        if bare.endswith("{") and "(" in bare and ("->" in bare or bare.startswith("ENTRY")):
+            toks = bare.split()
+            nm = toks[1] if bare.startswith("ENTRY") else toks[0]
+            current = nm.lstrip("%").split("(")[0]
+            ops, root = [], None
+            continue
+        if bare == "}":
+            if current is not None:
+                comps[current] = Computation(
+                    name=current, ops=ops,
+                    sym={o.name: o.typ for o in ops}, root=root,
+                )
+            current = None
+            continue
+        if current is None or not bare:
+            continue
+        o = _parse_def(bare)
+        if o is not None:
+            ops.append(o)
+            if bare.lstrip().startswith("ROOT"):
+                root = o
+    return comps
+
+
+def entry_name(hlo: str) -> Optional[str]:
+    for ln in hlo.splitlines():
+        if ln.startswith("ENTRY"):
+            return ln.split()[1].lstrip("%").split("(")[0]
+    return None
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for o in cond.ops:
+        for m in re.finditer(r"constant\((\d+)\)", o.line):
+            v = int(m.group(1))
+            if 1 < v <= _MAX_SANE_TRIPS:
+                best = max(best, v)
+    return best
+
+
+@dataclasses.dataclass
+class HLOCounts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective_by_kind.values())
+
+    def scaled(self, k: float) -> "HLOCounts":
+        return HLOCounts(self.flops * k, self.bytes * k,
+                         {kk: v * k for kk, v in self.collective_by_kind.items()})
+
+    def __add__(self, o: "HLOCounts") -> "HLOCounts":
+        d = dict(self.collective_by_kind)
+        for k, v in o.collective_by_kind.items():
+            d[k] = d.get(k, 0.0) + v
+        return HLOCounts(self.flops + o.flops, self.bytes + o.bytes, d)
+
+
+def _dot_flops(o: _Op, sym: Dict[str, str]) -> float:
+    out_n = 1
+    for d in _type_dims(o.typ):
+        out_n *= d
+    mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", o.line)
+    if mcd is None or not o.operands:
+        return 0.0
+    lhs_typ = sym.get(o.operands[0], "")
+    lhs_dims = _type_dims(lhs_typ)
+    K = 1
+    for idx in [int(x) for x in mcd.group(1).split(",") if x]:
+        if idx < len(lhs_dims):
+            K *= lhs_dims[idx]
+    return 2.0 * out_n * K
+
+
+def _fusion_target(o: _Op) -> Optional[str]:
+    m = re.search(r"calls=%?([\w\.\-]+)", o.line)
+    return m.group(1) if m else None
+
+
+def _op_bytes(o: _Op, sym: Dict[str, str], comps: Dict[str, Computation]) -> float:
+    """HBM traffic of one scheduled op."""
+    if o.op in _FREE_OPS:
+        return 0.0
+    out_b = _type_bytes(o.typ)
+    opnd_b = sum(_type_bytes(sym.get(n, "")) for n in o.operands)
+    if o.op == "dynamic-update-slice":
+        # in-place slice write: read+write the update slice only
+        upd = _type_bytes(sym.get(o.operands[1], "")) if len(o.operands) > 1 else 0
+        return 2.0 * upd
+    if o.op == "scatter":
+        # in-place scatter (KV-cache writes): traffic = updates + indices,
+        # not the whole buffer
+        upd = _type_bytes(sym.get(o.operands[2], "")) if len(o.operands) > 2 else 0
+        idx = _type_bytes(sym.get(o.operands[1], "")) if len(o.operands) > 1 else 0
+        return 2.0 * upd + idx
+    if o.op == "fusion":
+        callee = _fusion_target(o)
+        c = comps.get(callee) if callee else None
+        if c is not None and c.root is not None and c.root.op in (
+                "dynamic-update-slice", "scatter"):
+            # in-place-rooted fusion (scan carry / cache write): buffer is
+            # aliased; traffic = non-buffer operands + 2x the update.
+            upd_operand_idx = 1 if c.root.op == "dynamic-update-slice" else 2
+            upd = (_type_bytes(c.sym.get(c.root.operands[upd_operand_idx], ""))
+                   if len(c.root.operands) > upd_operand_idx else 0)
+            non_buffer = sum(
+                _type_bytes(sym.get(n, "")) for n in o.operands
+                if _type_bytes(sym.get(n, "")) != out_b
+            )
+            return non_buffer + 2.0 * upd
+        return out_b + opnd_b
+    if o.op == "dynamic-slice":
+        return 2.0 * out_b
+    return out_b + opnd_b
+
+
+def parse_hlo(hlo: str) -> HLOCounts:
+    comps = split_computations(hlo)
+
+    direct: Dict[str, HLOCounts] = {}
+    whiles: Dict[str, List[Tuple[str, str]]] = {}
+    flop_calls: Dict[str, List[str]] = {}
+    for name, comp in comps.items():
+        c = HLOCounts(collective_by_kind={})
+        wl: List[Tuple[str, str]] = []
+        fl: List[str] = []
+        for o in comp.ops:
+            base = o.op.replace("-start", "")
+            if base in COLLECTIVE_OPS:
+                c.collective_by_kind[base] = (
+                    c.collective_by_kind.get(base, 0.0) + _type_bytes(o.typ))
+                continue
+            if o.op.endswith("-done"):
+                continue
+            if o.op == "dot":
+                c.flops += _dot_flops(o, comp.sym)
+            c.bytes += _op_bytes(o, comp.sym, comps)
+            if o.op == "while":
+                mc = re.search(r"condition=%?([\w\.\-]+)", o.line)
+                mb = re.search(r"body=%?([\w\.\-]+)", o.line)
+                if mc and mb:
+                    wl.append((mb.group(1), mc.group(1)))
+            if o.op == "fusion":
+                tgt = _fusion_target(o)
+                if tgt:
+                    fl.append(tgt)
+            for m in re.finditer(r"to_apply=%?([\w\.\-]+)", o.line):
+                fl.append(m.group(1))
+        direct[name] = c
+        whiles[name] = wl
+        flop_calls[name] = fl
+
+    memo: Dict[str, HLOCounts] = {}
+
+    def total(name: str, depth: int = 0) -> HLOCounts:
+        if name not in direct or depth > 64:
+            return HLOCounts(collective_by_kind={})
+        if name in memo:
+            return memo[name]
+        acc = HLOCounts(direct[name].flops, direct[name].bytes,
+                        dict(direct[name].collective_by_kind))
+        for callee in flop_calls[name]:
+            sub = total(callee, depth + 1)
+            acc.flops += sub.flops      # fusion internals: flops only
+            for k, v in sub.collective_by_kind.items():
+                acc.collective_by_kind[k] = acc.collective_by_kind.get(k, 0.0) + v
+        for body, cond in whiles[name]:
+            trips = _trip_count(comps[cond]) if cond in comps else 1
+            acc = acc + total(body, depth + 1).scaled(trips)
+        memo[name] = acc
+        return acc
+
+    entry = entry_name(hlo)
+    if entry is None:
+        out = HLOCounts(collective_by_kind={})
+        for c in direct.values():
+            out = out + c
+        return out
+    return total(entry)

@@ -1,0 +1,193 @@
+"""Step builders: per (architecture × shape), construct the jittable step
+function, its ShapeDtypeStruct input specs, and the sharding trees.
+
+``train_*`` lowers a full optimizer step (fwd + bwd + AdamW update, grads
+remat'd through the layer scan) so the dry-run's memory analysis covers
+params + moments + activation working set.  ``prefill`` lowers the forward;
+``decode`` lowers one serve step against a seq_len KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMArchConfig, ShapeConfig
+from repro.core import PrecisionPolicy, AMP_BF16, get_policy
+from repro.models.lm import (
+    init_cache,
+    init_lm,
+    init_whisper,
+    init_whisper_cache,
+    lm_decode_step,
+    lm_forward,
+    whisper_decode_step,
+    whisper_encode,
+    whisper_forward,
+)
+from repro.optim import AdamW
+from repro.train.losses import cross_entropy
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the dry-run needs to lower one cell."""
+    step_fn: Callable
+    inputs: Dict[str, Any]           # name -> ShapeDtypeStruct pytree
+    params_shape: Any                # ShapeDtypeStruct pytree
+    extra_state_shape: Dict[str, Any]  # opt state / cache, ShapeDtypeStructs
+    description: str
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _init_fn(cfg: LMArchConfig):
+    return init_whisper if cfg.encoder_decoder else init_lm
+
+
+def params_shape(cfg: LMArchConfig):
+    """Parameter ShapeDtypeStructs without allocating (eval_shape)."""
+    return jax.eval_shape(lambda k: _init_fn(cfg)(k, cfg), jax.random.PRNGKey(0))
+
+
+def _remat(fn):
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def _loss_fn(cfg: LMArchConfig, policy: PrecisionPolicy):
+    if cfg.encoder_decoder:
+        def loss(params, batch):
+            logits = whisper_forward(params, batch["frames"], batch["dec_tokens"],
+                                     cfg, policy, remat=True)
+            return cross_entropy(logits, batch["dec_labels"])
+        return loss
+    if cfg.frontend == "vision_stub":
+        def loss(params, batch):
+            logits, aux = lm_forward(params, batch["tokens"], cfg, policy,
+                                     patch_embeds=batch["patch_embeds"], remat=True)
+            logits = logits[:, cfg.n_patches:]
+            return cross_entropy(logits, batch["labels"]) + 0.01 * aux
+        return loss
+
+    def loss(params, batch):
+        logits, aux = lm_forward(params, batch["tokens"], cfg, policy, remat=True)
+        return cross_entropy(logits, batch["labels"]) + 0.01 * aux
+    return loss
+
+
+def train_inputs(cfg: LMArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.encoder_decoder:
+        T = cfg.max_dec_len
+        return {
+            "frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+            "dec_tokens": _sds((B, T), jnp.int32),
+            "dec_labels": _sds((B, T), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        S_text = S - cfg.n_patches
+        return {
+            "tokens": _sds((B, S_text), jnp.int32),
+            "labels": _sds((B, S_text), jnp.int32),
+            "patch_embeds": _sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+        }
+    return {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+
+
+def build_train_step(cfg: LMArchConfig, shape: ShapeConfig,
+                     policy: PrecisionPolicy = AMP_BF16,
+                     optimizer: Optional[AdamW] = None) -> StepBundle:
+    opt = optimizer or AdamW(lr=1e-4)
+    loss_fn = _loss_fn(cfg, policy)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    p_shape = params_shape(cfg)
+    opt_shape = jax.eval_shape(opt.init, p_shape)
+    return StepBundle(
+        step_fn=train_step,
+        inputs={"batch": train_inputs(cfg, shape)},
+        params_shape=p_shape,
+        extra_state_shape={"opt_state": opt_shape},
+        description=f"train_step {cfg.name} {shape.name}",
+    )
+
+
+def build_prefill_step(cfg: LMArchConfig, shape: ShapeConfig,
+                       policy: PrecisionPolicy = AMP_BF16) -> StepBundle:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.encoder_decoder:
+        def prefill(params, batch):
+            memory = whisper_encode(params, batch["frames"], cfg, policy)
+            return memory
+        inputs = {"batch": {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16)}}
+    elif cfg.frontend == "vision_stub":
+        def prefill(params, batch):
+            logits, _ = lm_forward(params, batch["tokens"], cfg, policy,
+                                   patch_embeds=batch["patch_embeds"])
+            return logits[:, -1]
+        inputs = {"batch": {
+            "tokens": _sds((B, S - cfg.n_patches), jnp.int32),
+            "patch_embeds": _sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+        }}
+    else:
+        def prefill(params, batch):
+            logits, _ = lm_forward(params, batch["tokens"], cfg, policy)
+            return logits[:, -1]
+        inputs = {"batch": {"tokens": _sds((B, S), jnp.int32)}}
+    return StepBundle(
+        step_fn=prefill,
+        inputs=inputs,
+        params_shape=params_shape(cfg),
+        extra_state_shape={},
+        description=f"prefill {cfg.name} {shape.name}",
+    )
+
+
+def build_decode_step(cfg: LMArchConfig, shape: ShapeConfig,
+                      policy: PrecisionPolicy = AMP_BF16) -> StepBundle:
+    B, S = shape.global_batch, shape.seq_len
+    p_shape = params_shape(cfg)
+    if cfg.encoder_decoder:
+        # decode against a seq_len-frame encoder memory (cross-KV cached)
+        cache_shape = jax.eval_shape(
+            lambda p: init_whisper_cache(
+                p, jnp.zeros((B, S, cfg.d_model), jnp.bfloat16), cfg, B, policy),
+            p_shape,
+        )
+
+        def serve_step(params, cache, tokens):
+            return whisper_decode_step(params, cache, tokens, cfg, policy)
+    else:
+        cache_shape = jax.eval_shape(lambda: init_cache(cfg, B, S))
+
+        def serve_step(params, cache, tokens):
+            return lm_decode_step(params, cache, tokens, cfg, policy)
+
+    return StepBundle(
+        step_fn=serve_step,
+        inputs={"cache": cache_shape, "tokens": _sds((B,), jnp.int32)},
+        params_shape=p_shape,
+        extra_state_shape={},
+        description=f"serve_step {cfg.name} {shape.name} (KV len {S})",
+    )
+
+
+def build_step(cfg: LMArchConfig, shape: ShapeConfig,
+               policy: PrecisionPolicy = AMP_BF16) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, policy)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, policy)
+    return build_decode_step(cfg, shape, policy)

@@ -1,0 +1,20 @@
+"""Assigned LM-family architecture pool (decoder-only, MoE, SSM, hybrid,
+encoder-decoder audio, VLM) on a single scan-over-layers substrate."""
+from .common import blocked_attention, gqa_attention, plain_attention, rmsnorm  # noqa: F401
+from .model import (  # noqa: F401
+    FULL_WINDOW,
+    init_cache,
+    init_lm,
+    layer_windows,
+    lm_decode_step,
+    lm_forward,
+)
+from .moe import init_moe, moe_apply  # noqa: F401
+from .ssd import init_ssd, ssd_decode_step, ssd_forward  # noqa: F401
+from .whisper import (  # noqa: F401
+    init_whisper,
+    init_whisper_cache,
+    whisper_decode_step,
+    whisper_encode,
+    whisper_forward,
+)

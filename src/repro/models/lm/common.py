@@ -1,0 +1,220 @@
+"""Shared LM machinery: RMSNorm, RoPE, SwiGLU, blocked attention.
+
+Attention comes in three executable forms:
+  * plain (small seq; exact reference),
+  * blocked two-level scan (prefill/train at 4k-32k: O(S) memory via
+    online softmax over (q-chunk × kv-chunk) tiles — the pure-JAX mirror
+    of the Pallas flash kernel, used where interpret-mode Pallas would be
+    too slow / not lowerable inside pjit),
+  * decode (one query against a KV cache, optionally ring-buffered SWA).
+
+All matmuls take ``preferred_element_type=f32`` (MXU accumulate) with
+storage at the policy's compute dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, D) with positions (..., S) or (S,)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _mask_scores(s, q_pos, k_pos, window):
+    """Causal + sliding-window mask. window may be a traced scalar;
+    window >= seq acts as full attention."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    inwin = (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(causal & inwin, s, NEG_INF)
+
+
+def plain_attention(q, k, v, q_pos, k_pos, window) -> jnp.ndarray:
+    """q: (B,H,S,D), k/v: (B,H,Sk,D). Exact reference path (small S)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    s = _mask_scores(s, q_pos, k_pos, window)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def blocked_attention(
+    q, k, v, q_pos, k_pos, window, q_chunk: int = 0, k_chunk: int = 512
+) -> jnp.ndarray:
+    """Flash attention in pure JAX: q chunks are a *batched* (shardable)
+    dim; a single lax.scan streams kv chunks with online softmax.
+
+    Sharding: heads go to the ``model`` mesh axis when divisible; otherwise
+    the q-chunk axis does (context parallelism) — this is what keeps e.g.
+    smollm's 15 heads from replicating S² attention on every device
+    (EXPERIMENTS.md §Perf iteration 2).  q_chunk defaults to S/model_size
+    (capped at 512) so the chunk grid aligns with the sequence sharding.
+
+    Memory per kv step: (B,H,nq,Tq,Tk)/shards scores — O(S·Tk) not O(S²).
+    Blocks entirely outside the causal/window band still execute (masked).
+    """
+    from repro.dist.constrain import ambient_mesh, constrain
+
+    B, H, S, D = q.shape
+    Dv = v.shape[-1]   # MLA: v head dim != q/k head dim
+    Sk = k.shape[2]
+    mesh = ambient_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    if q_chunk <= 0:
+        q_chunk = max(64, min(512, S // max(msize, 1)))
+    pad_q = (-S) % q_chunk
+    pad_k = (-Sk) % k_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=2 ** 30)
+    nq, nk = q.shape[2] // q_chunk, k.shape[2] // k_chunk
+    scale = 1.0 / (D ** 0.5)
+
+    qb = q.reshape(B, H, nq, q_chunk, D)
+    shard_heads = (H % max(msize, 1)) == 0
+    if shard_heads:
+        qb = constrain(qb, "dp", "model", None, None, None)
+    else:
+        qb = constrain(qb, "dp", None, "model", None, None)
+    kb = k.reshape(B, H, nk, k_chunk, D).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, H, nk, k_chunk, Dv).transpose(2, 0, 1, 3, 4)
+    qpb = q_pos.reshape(nq, q_chunk)
+    kpb = k_pos.reshape(nk, k_chunk)
+
+    def kv_step(carry, kv_in):
+        acc, m, l = carry
+        ki, vi, kp = kv_in  # (B,H,Tk,D), (Tk,)
+        s = jnp.einsum("bhntd,bhkd->bhntk", qb, ki,
+                       preferred_element_type=jnp.float32) * scale
+        causal = qpb[:, :, None] >= kp[None, None, :]
+        inwin = (qpb[:, :, None] - kp[None, None, :]) < window
+        s = jnp.where((causal & inwin)[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhntk,bhkd->bhntd", p.astype(vi.dtype), vi,
+            preferred_element_type=jnp.float32,
+        )
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, nq, q_chunk, Dv), jnp.float32)
+    m0 = jnp.full((B, H, nq, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, nq, q_chunk), jnp.float32)
+    kv_step = jax.checkpoint(kv_step)  # flash bwd: recompute p per block
+    (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kb, vb, kpb))
+    out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+    out = out.reshape(B, H, nq * q_chunk, Dv)
+    return out[:, :, :S, :]
+
+
+def gqa_attention(
+    q, k, v, q_pos, k_pos, window, *, blocked_threshold: int = 1024
+) -> jnp.ndarray:
+    """GQA: q (B,Hq,S,D); k/v (B,Hkv,Sk,D) with Hq = g*Hkv; repeats kv."""
+    Hq, Hkv = q.shape[1], k.shape[1]
+    if Hq != Hkv:
+        g = Hq // Hkv
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    fn = blocked_attention if q.shape[2] >= blocked_threshold else plain_attention
+    return fn(q, k, v, q_pos, k_pos, window)
+
+
+def decode_attention(q, k_cache, v_cache, k_pos, q_pos, window) -> jnp.ndarray:
+    """One-token decode: q (B,H,1,D) vs cache (B,Hkv,S,D).
+
+    k_pos: (B, S) per-slot cache positions (-1 => empty; supports ring-
+    buffer SWA caches), q_pos: (B,) per-slot current position (continuous
+    batching: every request tracks its own clock).  Linear in S — the
+    sub-quadratic serve path.
+    """
+    Hq, Hkv = q.shape[1], k_cache.shape[1]
+    if Hq != Hkv:
+        g = Hq // Hkv
+        k_cache = jnp.repeat(k_cache, g, axis=1)
+        v_cache = jnp.repeat(v_cache, g, axis=1)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    qp = q_pos[:, None]
+    valid = (k_pos >= 0) & (k_pos <= qp) & ((qp - k_pos) < window)  # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v_cache.dtype), v_cache,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def apply_rope_one(x: jnp.ndarray, pos: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """RoPE for one decode token: x (B, H, D), pos (B,)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)
+    ang = pos[:, None, None].astype(jnp.float32) * freqs  # (B, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = (1.0 / d_model) ** 0.5
+    s_out = (1.0 / d_ff) ** 0.5
+    return {
+        "wg": s_in * jax.random.normal(k1, (d_model, d_ff), jnp.float32),
+        "wu": s_in * jax.random.normal(k2, (d_model, d_ff), jnp.float32),
+        "wd": s_out * jax.random.normal(k3, (d_ff, d_model), jnp.float32),
+    }
+
+
+def swiglu(p, x, dtype):
+    g = jnp.einsum("...d,df->...f", x.astype(dtype), p["wg"].astype(dtype),
+                   preferred_element_type=jnp.float32).astype(dtype)
+    u = jnp.einsum("...d,df->...f", x.astype(dtype), p["wu"].astype(dtype),
+                   preferred_element_type=jnp.float32).astype(dtype)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, p["wd"].astype(dtype),
+                      preferred_element_type=jnp.float32).astype(dtype)

@@ -1,0 +1,380 @@
+"""Unified decoder-only LM covering the assigned architecture pool.
+
+Per-layer mixer dispatch (static, from config):
+  attn   — GQA attention with RoPE (llama-family: smollm, granite,
+           stablelm, starcoder2, llava backbone) or MLA (deepseek).
+  ssd    — Mamba-2 state-space duality (mamba2-370m).
+  hymba  — parallel attention + SSD heads, mean-fused (hymba-1.5b); SWA
+           windows are per-layer *data* (an (L,) array scanned alongside
+           the weights) so full-attention layers coexist with sliding-
+           window layers inside one ``lax.scan`` stack.
+
+FFN dispatch: dense SwiGLU or MoE (sort-based capacity dispatch, expert
+parallelism over the ``model`` mesh axis).
+
+All layer weights are stacked on a leading L axis and the layer loop is a
+``lax.scan`` — the HLO stays one-layer-sized, which keeps the 512-device
+dry-run compile tractable and gives remat a natural boundary.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PrecisionPolicy, FULL
+from repro.configs.base import LMArchConfig
+from repro.dist.constrain import constrain, constrain_bhsd, constrain_bsd
+from .common import (
+    apply_rope,
+    apply_rope_one,
+    decode_attention,
+    gqa_attention,
+    init_swiglu,
+    rmsnorm,
+    swiglu,
+)
+from .moe import init_moe, moe_apply
+from .ssd import init_ssd, ssd_decode_step, ssd_forward
+
+FULL_WINDOW = 2 ** 30  # "window" value meaning full attention
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: LMArchConfig):
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = (1.0 / d) ** 0.5
+    if cfg.mla_kv_lora:
+        r, dr, dn, dv = cfg.mla_kv_lora, cfg.mla_rope_dim, cfg.mla_nope_dim, cfg.mla_v_dim
+        keys = jax.random.split(key, 6)
+        return {
+            "wq": s * jax.random.normal(keys[0], (d, H * (dn + dr)), jnp.float32),
+            "w_dkv": s * jax.random.normal(keys[1], (d, r), jnp.float32),
+            "w_kr": s * jax.random.normal(keys[2], (d, dr), jnp.float32),
+            "w_uk": (1.0 / r) ** 0.5 * jax.random.normal(keys[3], (r, H * dn), jnp.float32),
+            "w_uv": (1.0 / r) ** 0.5 * jax.random.normal(keys[4], (r, H * dv), jnp.float32),
+            "wo": (1.0 / (H * dv)) ** 0.5 * jax.random.normal(keys[5], (H * dv, d), jnp.float32),
+        }
+    keys = jax.random.split(key, 4)
+    return {
+        "wq": s * jax.random.normal(keys[0], (d, H * hd), jnp.float32),
+        "wk": s * jax.random.normal(keys[1], (d, Hk * hd), jnp.float32),
+        "wv": s * jax.random.normal(keys[2], (d, Hk * hd), jnp.float32),
+        "wo": (1.0 / (H * hd)) ** 0.5 * jax.random.normal(keys[3], (H * hd, d), jnp.float32),
+    }
+
+
+def _init_layer(key, cfg: LMArchConfig):
+    keys = jax.random.split(key, 4)
+    layer = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+             "ln2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.mixer in ("attn", "hymba"):
+        layer["attn"] = _init_attn(keys[0], cfg)
+    if cfg.mixer in ("ssd", "hymba"):
+        layer["ssd"] = init_ssd(keys[1], cfg.d_model, cfg.d_inner,
+                                cfg.ssm_heads, cfg.ssm_state)
+    if cfg.moe_experts:
+        layer["ffn"] = init_moe(keys[2], cfg.d_model, cfg.moe_experts,
+                                cfg.moe_ff, cfg.moe_shared, cfg.moe_ff)
+    elif cfg.d_ff:
+        layer["ffn"] = init_swiglu(keys[2], cfg.d_model, cfg.d_ff)
+    return layer
+
+
+def layer_windows(cfg: LMArchConfig, n_layers: Optional[int] = None) -> jnp.ndarray:
+    """(L,) per-layer attention windows.  hymba: n_full_attn_layers get
+    full attention (first/middle/last), the rest the SWA window."""
+    L = n_layers or cfg.n_layers
+    if cfg.attn_window <= 0:
+        return jnp.full((L,), FULL_WINDOW, jnp.int32)
+    w = jnp.full((L,), cfg.attn_window, jnp.int32)
+    if cfg.n_full_attn_layers > 0:
+        idx = jnp.linspace(0, L - 1, cfg.n_full_attn_layers).astype(jnp.int32)
+        w = w.at[idx].set(FULL_WINDOW)
+    return w
+
+
+def init_lm(key: jax.Array, cfg: LMArchConfig) -> Dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    layers = [_init_layer(keys[i], cfg) for i in range(cfg.n_layers)]
+    params = {
+        "embed": (1.0 / cfg.d_model ** 0.5)
+        * jax.random.normal(keys[-3], (cfg.vocab, cfg.d_model), jnp.float32),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (1.0 / cfg.d_model ** 0.5) * jax.random.normal(
+            keys[-2], (cfg.vocab, cfg.d_model), jnp.float32
+        )
+    if cfg.frontend == "vision_stub":
+        params["patch_proj"] = (1.0 / cfg.d_model ** 0.5) * jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.d_model), jnp.float32
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Attention forward (full-sequence / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_forward(ap, h, positions, window, cfg: LMArchConfig, dtype):
+    B, S, d = h.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def proj(w, x):
+        return jnp.einsum("bsd,de->bse", x.astype(dtype), w.astype(dtype),
+                          preferred_element_type=jnp.float32).astype(dtype)
+
+    if cfg.mla_kv_lora:
+        dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+        q = proj(ap["wq"], h).reshape(B, S, H, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+        q = jnp.concatenate([q_nope.transpose(0, 2, 1, 3), q_rope], axis=-1)
+        c_kv = proj(ap["w_dkv"], h)                       # (B,S,r)
+        k_r = proj(ap["w_kr"], h)                         # (B,S,dr)
+        k_r = apply_rope(k_r[:, None], positions, cfg.rope_theta)  # (B,1,S,dr)
+        k_n = proj(ap["w_uk"], c_kv).reshape(B, S, H, dn).transpose(0, 2, 1, 3)
+        k = constrain_bhsd(jnp.concatenate(
+            [k_n, jnp.broadcast_to(k_r, (B, H, S, dr))], axis=-1))
+        v = constrain_bhsd(proj(ap["w_uv"], c_kv).reshape(B, S, H, dv).transpose(0, 2, 1, 3))
+        q = constrain_bhsd(q)
+        o = gqa_attention(q, k, v, positions, positions, window)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, H * dv)
+    else:
+        q = constrain_bhsd(proj(ap["wq"], h).reshape(B, S, H, hd).transpose(0, 2, 1, 3))
+        k = constrain_bhsd(proj(ap["wk"], h).reshape(B, S, Hk, hd).transpose(0, 2, 1, 3))
+        v = constrain_bhsd(proj(ap["wv"], h).reshape(B, S, Hk, hd).transpose(0, 2, 1, 3))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = gqa_attention(q, k, v, positions, positions, window)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return jnp.einsum("bse,ed->bsd", o, ap["wo"].astype(dtype),
+                      preferred_element_type=jnp.float32).astype(dtype)
+
+
+def _ffn_forward(fp, h, cfg: LMArchConfig, dtype):
+    if cfg.moe_experts:
+        B, S, d = h.shape
+        out, aux = moe_apply(fp, h.reshape(B * S, d), cfg.moe_top_k,
+                             cfg.capacity_factor, dtype)
+        return out.reshape(B, S, d), aux
+    return swiglu(fp, h, dtype), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def lm_forward(
+    params: Dict,
+    tokens: jnp.ndarray,
+    cfg: LMArchConfig,
+    policy: PrecisionPolicy = FULL,
+    patch_embeds: Optional[jnp.ndarray] = None,
+    inputs_embeds: Optional[jnp.ndarray] = None,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> (logits (B, S_total, V) at f32, aux_loss).
+
+    vlm: ``patch_embeds`` (B, Np, d) are projected and prepended.
+    audio/enc usage can pass ``inputs_embeds`` directly instead of tokens.
+    ``remat=True`` checkpoints each layer (training at 4k×256 needs it).
+    """
+    dtype = policy.compute_dtype
+    if inputs_embeds is not None:
+        h = inputs_embeds.astype(dtype)
+    else:
+        h = params["embed"][tokens].astype(dtype)
+    if patch_embeds is not None:
+        pe = jnp.einsum("bnd,de->bne", patch_embeds.astype(dtype),
+                        params["patch_proj"].astype(dtype)).astype(dtype)
+        h = jnp.concatenate([pe, h], axis=1)
+    h = constrain_bsd(h)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)
+    windows = layer_windows(cfg)
+
+    def block(carry, layer_in):
+        h, aux = carry
+        lp, window = layer_in
+        h = constrain_bsd(h)
+        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        if cfg.mixer == "attn":
+            mix = _attn_forward(lp["attn"], hn, positions, window, cfg, dtype)
+        elif cfg.mixer == "ssd":
+            mix = ssd_forward(lp["ssd"], hn, cfg, policy)
+        else:  # hymba: parallel attention + SSD heads, mean-fused
+            a = _attn_forward(lp["attn"], hn, positions, window, cfg, dtype)
+            s = ssd_forward(lp["ssd"], hn, cfg, policy)
+            mix = 0.5 * (a + s)
+        h = h + mix
+        hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        f, a_loss = _ffn_forward(lp.get("ffn"), hn, cfg, dtype) if "ffn" in lp else (0.0, 0.0)
+        h = h + f
+        return (h, aux + a_loss), None
+
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    (h, aux), _ = jax.lax.scan(block, (h, jnp.zeros((), jnp.float32)),
+                               (params["layers"], windows))
+    h = constrain_bsd(rmsnorm(h, params["final_norm"], cfg.norm_eps))
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                        unembed.astype(jnp.float32))
+    logits = constrain(logits, "dp", "model", None)  # S-sharded CE
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: LMArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+    """Decode cache pytree (zeros; per-slot ``step`` clocks support
+    continuous batching — every request tracks its own position).
+
+    Attention caches are ring buffers of length min(max_len, window) when
+    the arch is sliding-window (hymba), else full length.  SSD state is the
+    O(1) recurrent state.  MLA caches the compressed c_kv + rope key only
+    (the MLA memory saving).
+    """
+    L = cfg.n_layers
+    cache: Dict = {"step": jnp.zeros((batch,), jnp.int32)}
+    if cfg.mixer in ("attn", "hymba"):
+        W = max_len if cfg.attn_window <= 0 else min(max_len, cfg.attn_window)
+        if cfg.mla_kv_lora:
+            cache["c_kv"] = jnp.zeros((L, batch, W, cfg.mla_kv_lora), dtype)
+            cache["k_rope"] = jnp.zeros((L, batch, W, cfg.mla_rope_dim), dtype)
+        else:
+            cache["k"] = jnp.zeros((L, batch, cfg.n_kv_heads, W, cfg.hd), dtype)
+            cache["v"] = jnp.zeros((L, batch, cfg.n_kv_heads, W, cfg.hd), dtype)
+        cache["kv_pos"] = jnp.full((L, batch, W), -1, jnp.int32)
+    if cfg.mixer in ("ssd", "hymba"):
+        cache["ssd_state"] = jnp.zeros(
+            (L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+    return cache
+
+
+def _attn_decode(ap, h, layer_cache, pos, window, cfg: LMArchConfig, dtype):
+    """h: (B, d) one token; layer_cache: this layer's cache slices;
+    pos: (B,) per-slot positions (continuous batching)."""
+    B, d = h.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def proj(w, x):
+        return jnp.einsum("bd,de->be", x.astype(dtype), w.astype(dtype),
+                          preferred_element_type=jnp.float32).astype(dtype)
+
+    W = layer_cache["kv_pos"].shape[-1]
+    slot = jnp.mod(pos, W)          # (B,)
+    b_idx = jnp.arange(B)
+
+    if cfg.mla_kv_lora:
+        dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+        q = proj(ap["wq"], h).reshape(B, H, dn + dr)
+        q_r = apply_rope_one(q[:, :, dn:], pos, cfg.rope_theta)
+        q = jnp.concatenate([q[:, :, :dn], q_r], axis=-1)[:, :, None, :]  # (B,H,1,*)
+        c_kv = proj(ap["w_dkv"], h)
+        k_r = apply_rope_one(proj(ap["w_kr"], h)[:, None, :], pos, cfg.rope_theta)[:, 0]
+        ckv_cache = layer_cache["c_kv"].at[b_idx, slot].set(
+            c_kv.astype(layer_cache["c_kv"].dtype))
+        kr_cache = layer_cache["k_rope"].at[b_idx, slot].set(
+            k_r.astype(layer_cache["k_rope"].dtype))
+        kv_pos = layer_cache["kv_pos"].at[b_idx, slot].set(pos)
+        # expand cached compressed kv for all W slots
+        k_n = jnp.einsum("bwr,re->bwe", ckv_cache.astype(dtype), ap["w_uk"].astype(dtype),
+                         preferred_element_type=jnp.float32).astype(dtype)
+        k_n = k_n.reshape(B, W, H, dn).transpose(0, 2, 1, 3)
+        k_full = jnp.concatenate(
+            [k_n, jnp.broadcast_to(kr_cache.astype(dtype)[:, None], (B, H, W, dr))], axis=-1
+        )
+        v_full = jnp.einsum("bwr,re->bwe", ckv_cache.astype(dtype), ap["w_uv"].astype(dtype),
+                            preferred_element_type=jnp.float32).astype(dtype)
+        v_full = v_full.reshape(B, W, H, dv).transpose(0, 2, 1, 3)
+        o = decode_attention(q, k_full, v_full, kv_pos, pos, window)
+        o = o[:, :, 0].reshape(B, H * dv)
+        new = {"c_kv": ckv_cache, "k_rope": kr_cache, "kv_pos": kv_pos}
+    else:
+        q = proj(ap["wq"], h).reshape(B, H, hd)
+        k = proj(ap["wk"], h).reshape(B, Hk, hd)
+        v = proj(ap["wv"], h).reshape(B, Hk, hd)
+        q = apply_rope_one(q, pos, cfg.rope_theta)[:, :, None, :]
+        k = apply_rope_one(k, pos, cfg.rope_theta)
+        k_cache = layer_cache["k"].at[b_idx, :, slot].set(k.astype(layer_cache["k"].dtype))
+        v_cache = layer_cache["v"].at[b_idx, :, slot].set(v.astype(layer_cache["v"].dtype))
+        kv_pos = layer_cache["kv_pos"].at[b_idx, slot].set(pos)
+        o = decode_attention(q, k_cache.astype(dtype), v_cache.astype(dtype),
+                             kv_pos, pos, window)
+        o = o[:, :, 0].reshape(B, H * hd)
+        new = {"k": k_cache, "v": v_cache, "kv_pos": kv_pos}
+    out = jnp.einsum("be,ed->bd", o, ap["wo"].astype(dtype),
+                     preferred_element_type=jnp.float32).astype(dtype)
+    return out, new
+
+
+def lm_decode_step(
+    params: Dict,
+    cache: Dict,
+    tokens: jnp.ndarray,   # (B,) next token ids
+    cfg: LMArchConfig,
+    policy: PrecisionPolicy = FULL,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One serve step: returns (logits (B, V) f32, new cache).
+
+    ``cache['step']`` is (B,): per-slot position clocks."""
+    dtype = policy.compute_dtype
+    pos = cache["step"]                          # (B,)
+    h = params["embed"][tokens].astype(dtype)   # (B, d)
+    windows = layer_windows(cfg)
+
+    # assemble per-layer cache slices for the scan
+    layer_cache_keys = [k for k in cache if k not in ("step",)]
+    xs_cache = {k: cache[k] for k in layer_cache_keys}
+
+    def block(h, layer_in):
+        lp, window, lc = layer_in
+        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        new_lc = dict(lc)
+        if cfg.mixer == "attn":
+            mix, upd = _attn_decode(lp["attn"], hn, lc, pos, window, cfg, dtype)
+            new_lc.update(upd)
+        elif cfg.mixer == "ssd":
+            mix, new_state = ssd_decode_step(lp["ssd"], hn, lc["ssd_state"], cfg, policy)
+            new_lc["ssd_state"] = new_state
+        else:
+            a, upd = _attn_decode(lp["attn"], hn, lc, pos, window, cfg, dtype)
+            s, new_state = ssd_decode_step(lp["ssd"], hn, lc["ssd_state"], cfg, policy)
+            mix = 0.5 * (a + s)
+            new_lc.update(upd)
+            new_lc["ssd_state"] = new_state
+        h = h + mix
+        hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if "ffn" in lp:
+            if cfg.moe_experts:
+                f, _ = moe_apply(lp["ffn"], hn, cfg.moe_top_k, cfg.capacity_factor, dtype)
+            else:
+                f = swiglu(lp["ffn"], hn, dtype)
+            h = h + f
+        return h, new_lc
+
+    h, new_xs = jax.lax.scan(block, h, (params["layers"], windows, xs_cache))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", h.astype(jnp.float32), unembed.astype(jnp.float32))
+    new_cache = dict(new_xs)
+    new_cache["step"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with grouped-local, sort-based capacity dispatch.
+
+Index-based (not one-hot) dispatch: the GShard (T, E, C) one-hot tensor is
+O(T·E·C) and explodes at 32k tokens × 40 experts; instead we argsort the
+(token, expert) assignments by expert, compute each token's position inside
+its expert's segment with a cumulative bincount, drop beyond-capacity
+tokens, and gather/scatter through an (E, C) index table.
+
+**Grouped-local routing** (§Perf iterations 3-4): tokens are reshaped to
+(G, T/G) with G = the data-parallel degree and the dispatch is vmapped per
+group, so routing never crosses data shards — without this GSPMD turned
+the global argsort into a 141-second collective term on granite-moe
+train_4k.  Two alternatives were measured and REJECTED (EXPERIMENTS.md
+§Perf iteration 4): (a) explicit G-batched dispatch ops (index-matrix
+scatters lower to gather-heavy GSPMD code: granite-moe 27.0s → 34.9s);
+(b) forcing E-over-model sharding on the dispatch gather/scatter
+(deepseek 14.2s → 38s).  The vmapped form below is the best-measured:
+expert GEMMs shard through the *weights'* sharding (EP over model when E
+divides — deepseek 64/16; ff-dim sharding fallback for granite-moe's
+indivisible E=40).
+
+The router runs in f32 (reduction-sensitive, mirroring the AMP blocklist
+rule the paper's precision policy encodes); expert GEMMs follow the
+policy's compute dtype with f32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import init_swiglu, swiglu
+from repro.dist.constrain import ambient_mesh, constrain, constrain_tokens
+
+
+def init_moe(key, d_model, n_experts, moe_ff, n_shared, shared_ff):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s_in = (1.0 / d_model) ** 0.5
+    s_out = (1.0 / moe_ff) ** 0.5
+    params = {
+        "router": s_in * jax.random.normal(k1, (d_model, n_experts), jnp.float32),
+        "wg": s_in * jax.random.normal(k2, (n_experts, d_model, moe_ff), jnp.float32),
+        "wu": s_in * jax.random.normal(k3, (n_experts, d_model, moe_ff), jnp.float32),
+        "wd": s_out * jax.random.normal(k4, (n_experts, moe_ff, d_model), jnp.float32),
+    }
+    if n_shared > 0:
+        params["shared"] = init_swiglu(k5, d_model, n_shared * shared_ff)
+    return params
+
+
+def moe_apply(
+    params,
+    x: jnp.ndarray,           # (T, d) flattened tokens
+    top_k: int,
+    capacity_factor: float,
+    dtype,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (T, d), aux_loss scalar)."""
+    T, d = x.shape
+    mesh = ambient_mesh()
+    G = 1
+    if mesh is not None:
+        for n in ("pod", "data"):
+            if n in mesh.axis_names:
+                G *= mesh.shape[n]
+        if T % G:
+            G = 1
+    if G > 1:
+        xg = constrain(x.reshape(G, T // G, d), "dp", None, None)
+        outs, auxes = jax.vmap(
+            lambda xi: _moe_one_group(params, xi, top_k, capacity_factor,
+                                      dtype, use_constraints=False)
+        )(xg)
+        out = constrain(outs, "dp", None, None).reshape(T, d)
+        return out, jnp.mean(auxes)
+    return _moe_one_group(params, x, top_k, capacity_factor, dtype)
+
+
+def _moe_one_group(
+    params,
+    x: jnp.ndarray,           # (T, d) tokens local to one dispatch group
+    top_k: int,
+    capacity_factor: float,
+    dtype,
+    use_constraints: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    # sharding constraints are illegal under the grouped vmap; the caller
+    # constrains the grouped tensors instead
+    if use_constraints:
+        x = constrain_tokens(x)
+    T, d = x.shape
+    E = params["router"].shape[1]
+    C = max(1, int(top_k * T * capacity_factor / E))
+
+    # --- routing in f32 ---
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)        # (T, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)                                     # (E,)
+    ce = jnp.zeros(E).at[expert_ids.reshape(-1)].add(1.0) / (T * top_k)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch ---
+    flat_expert = expert_ids.reshape(-1)                        # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T), top_k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert)
+    se, stok, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    counts = jnp.zeros(E, jnp.int32).at[se].add(1)
+    seg_start = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_seg = jnp.arange(T * top_k) - seg_start[se]
+    valid = pos_in_seg < C
+
+    # (E, C) index table: which flat token sits in slot (e, c); sentinel T
+    table = jnp.full((E, C), T, jnp.int32)
+    table = table.at[se, jnp.minimum(pos_in_seg, C - 1)].set(
+        jnp.where(valid, stok, T)
+    )
+    gates_tab = jnp.zeros((E, C), jnp.float32).at[
+        se, jnp.minimum(pos_in_seg, C - 1)
+    ].set(jnp.where(valid, sg, 0.0))
+
+    # gather expert inputs (pad row T = zeros)
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    expert_in = x_pad[table].astype(dtype)                      # (E, C, d)
+    if use_constraints:
+        expert_in = constrain(expert_in, "model", None, None)   # EP when E divides
+
+    def _mm(expr, a, b):
+        # CPU thunk runtime can't execute batched bf16xbf16=f32 dots;
+        # upcast there (TPU keeps bf16 inputs + f32 MXU accumulation).
+        if jax.default_backend() == "cpu" and a.dtype == jnp.bfloat16:
+            a, b = a.astype(jnp.float32), b.astype(jnp.float32)
+        return jnp.einsum(expr, a, b, preferred_element_type=jnp.float32)
+
+    g = _mm("ecd,edf->ecf", expert_in, params["wg"].astype(dtype)).astype(dtype)
+    u = _mm("ecd,edf->ecf", expert_in, params["wu"].astype(dtype)).astype(dtype)
+    h = jax.nn.silu(g) * u
+    y = _mm("ecf,efd->ecd", h, params["wd"].astype(dtype))      # (E, C, d) f32
+
+    # --- combine: scatter-add back to tokens, gate-weighted ---
+    y = y * gates_tab[..., None]
+    out = jnp.zeros((T + 1, d), jnp.float32).at[table.reshape(-1)].add(
+        y.reshape(-1, d)
+    )[:T]
+
+    if "shared" in params:
+        out = out + swiglu(params["shared"], x, dtype).astype(jnp.float32)
+    return out.astype(dtype), aux

@@ -1,0 +1,157 @@
+"""Mamba-2 SSD layer (state-space duality, arXiv:2405.21060).
+
+Chunked algorithm: within a chunk the recurrence is evaluated as a masked
+(attention-like) tensor contraction; across chunks a small recurrent state
+(B, H, P, N) is carried by ``lax.scan``.  The chunk contractions go through
+the paper's memory-greedy contraction executor (`repro.core.contract`) —
+this is where the paper's technique partially applies to the SSM family
+(DESIGN.md §5): storage at the policy's compute dtype, f32 accumulation.
+
+Decode is the O(1) recurrent update — the sub-quadratic serve path that
+makes the long_500k cell runnable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import contract, FULL
+from repro.dist.constrain import constrain_bsd
+
+
+def init_ssd(key, d_model, d_inner, n_heads, d_state):
+    P = d_inner // n_heads
+    keys = jax.random.split(key, 7)
+    s_in = (1.0 / d_model) ** 0.5
+    return {
+        # fused input projection: [x (d_inner), z (d_inner), B (N), C (N), dt (H)]
+        "w_in": s_in * jax.random.normal(
+            keys[0], (d_model, 2 * d_inner + 2 * d_state + n_heads), jnp.float32
+        ),
+        "w_out": (1.0 / d_inner) ** 0.5 * jax.random.normal(
+            keys[1], (d_inner, d_model), jnp.float32
+        ),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def _split_proj(params, u, d_inner, d_state, n_heads, dtype):
+    proj = jnp.einsum("...d,de->...e", u.astype(dtype), params["w_in"].astype(dtype),
+                      preferred_element_type=jnp.float32).astype(dtype)
+    x, z, Bc, Cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state],
+        axis=-1,
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    return x, z, Bc.astype(jnp.float32), Cc.astype(jnp.float32), dt
+
+
+def ssd_forward(
+    params, u: jnp.ndarray, cfg, policy=FULL
+) -> jnp.ndarray:
+    """u: (B, S, d_model) -> (B, S, d_model); chunked SSD over S."""
+    dtype = policy.compute_dtype
+    B, S, _ = u.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Q = cfg.ssm_chunk
+    d_inner = cfg.d_inner
+
+    u = constrain_bsd(u)
+    x, z, Bc, Cc, dt = _split_proj(params, u, d_inner, N, H, dtype)
+    x = constrain_bsd(x)
+    A = -jnp.exp(params["A_log"])                    # (H,) negative
+
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xh = x.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    Bcc = Bc.reshape(B, nc, Q, N)
+    Ccc = Cc.reshape(B, nc, Q, N)
+
+    # per-step log decay and within-chunk cumulative decay
+    dA = dtc * A[None, None, None, :]                # (B, nc, Q, H) negative
+    cum = jnp.cumsum(dA, axis=2)                     # a_t = Σ_{s<=t} dA_s
+
+    def chunk_step(state, inp):
+        # state: (B, H, P, N)
+        xq, dtq, bq, cq, aq, da = inp                # xq (B,Q,H,P) etc.
+        # intra-chunk "attention": L[t,s] = exp(a_t - a_s) for s<=t.
+        # Mask the *exponent* (not the result): where() after exp() leaks
+        # inf into the gradient of masked entries.
+        delta = aq[:, :, None, :] - aq[:, None, :, :]           # (B,Q,Qs,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        delta = jnp.where(tri[None, :, :, None], delta, -jnp.inf)
+        L = jnp.exp(delta)
+        scores = contract("bqn,bsn->bqs", cq, bq, policy=policy)  # (B,Q,Qs)
+        xdt = xq * dtq[..., None]                    # (B,Q,H,P) dt-weighted
+        y_intra = jnp.einsum("bqs,bqsh,bshp->bqhp", scores, L, xdt,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cq, state, jnp.exp(aq),
+                             preferred_element_type=jnp.float32)
+        # state update: S' = exp(a_Q) S + Σ_t exp(a_Q - a_t) B_t (dt_t x_t)
+        decay_to_end = jnp.exp(aq[:, -1, None, :] - aq)          # (B,Q,H)
+        ds = jnp.einsum("bqn,bqhp,bqh->bhpn", bq, xdt, decay_to_end,
+                        preferred_element_type=jnp.float32)
+        new_state = state * jnp.exp(aq[:, -1])[:, :, None, None] + ds
+        return new_state, y_intra + y_inter
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    inputs = (
+        xh.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3),
+        Bcc.transpose(1, 0, 2, 3),
+        Ccc.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+        dA.transpose(1, 0, 2, 3),
+    )
+    _, ys = jax.lax.scan(chunk_step, state0, inputs)             # (nc,B,Q,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, P)[:, :S]
+    y = y + xh.reshape(B, Sp, H, P)[:, :S] * params["D"][None, None, :, None]
+
+    # gated RMSNorm output (mamba2)
+    y = y.reshape(B, S, d_inner)
+    z = z[:, :S].astype(jnp.float32)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-6) * params["norm_w"]
+    return jnp.einsum("bsd,de->bse", y.astype(dtype), params["w_out"].astype(dtype),
+                      preferred_element_type=jnp.float32).astype(dtype)
+
+
+def ssd_decode_step(
+    params, u: jnp.ndarray, state: jnp.ndarray, cfg, policy=FULL
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrent update.  u: (B, d_model); state (B, H, P, N)."""
+    dtype = policy.compute_dtype
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x, z, Bc, Cc, dt = _split_proj(params, u, cfg.d_inner, N, H, dtype)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                # (B, H)
+    xh = x.reshape(-1, H, P).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    new_state = state * dA[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhpn", Bc, xdt, preferred_element_type=jnp.float32
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cc, new_state,
+                   preferred_element_type=jnp.float32)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(-1, cfg.d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-6) * params["norm_w"]
+    out = jnp.einsum("bd,de->be", y.astype(dtype), params["w_out"].astype(dtype),
+                     preferred_element_type=jnp.float32).astype(dtype)
+    return out, new_state

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, S, d) directly.  The backbone is
+faithful in structure: bidirectional encoder self-attention over frames,
+causal decoder self-attention (max 448 tokens), cross-attention into the
+encoder memory.  Positions use RoPE uniformly (documented deviation from
+Whisper's sinusoidal/learned embeddings — DESIGN.md §7).
+
+Decode (`whisper_decode_step`) caches decoder self-KV (ring over 448) and
+the cross-KV projected once from the encoder memory — the 32k-frame
+`decode_32k` cell measures exactly that cross-KV-bound regime.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PrecisionPolicy, FULL
+from repro.configs.base import LMArchConfig
+from .common import apply_rope, apply_rope_one, decode_attention, gqa_attention, init_swiglu, rmsnorm, swiglu
+from .model import FULL_WINDOW, _init_attn
+from repro.dist.constrain import constrain_bhsd, constrain_bsd
+
+
+def _init_block(key, cfg, cross: bool):
+    keys = jax.random.split(key, 4)
+    blk = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": _init_attn(keys[0], cfg),
+        "ffn": init_swiglu(keys[1], cfg.d_model, cfg.d_ff),
+    }
+    if cross:
+        blk["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+        blk["xattn"] = _init_attn(keys[2], cfg)
+    return blk
+
+
+def init_whisper(key: jax.Array, cfg: LMArchConfig) -> Dict:
+    enc_l = cfg.n_layers
+    dec_l = cfg.dec_layers or cfg.n_layers
+    keys = jax.random.split(key, enc_l + dec_l + 2)
+    enc = [_init_block(keys[i], cfg, cross=False) for i in range(enc_l)]
+    dec = [_init_block(keys[enc_l + i], cfg, cross=True) for i in range(dec_l)]
+    return {
+        "embed": (1.0 / cfg.d_model ** 0.5)
+        * jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model), jnp.float32),
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "dec_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "enc": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *enc),
+        "dec": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *dec),
+    }
+
+
+def _mha(ap, hq, hkv, q_pos, k_pos, causal, cfg, dtype):
+    B, Sq, d = hq.shape
+    Sk = hkv.shape[1]
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def proj(w, x):
+        return jnp.einsum("bsd,de->bse", x.astype(dtype), w.astype(dtype),
+                          preferred_element_type=jnp.float32).astype(dtype)
+
+    q = constrain_bhsd(proj(ap["wq"], hq).reshape(B, Sq, H, hd).transpose(0, 2, 1, 3))
+    k = constrain_bhsd(proj(ap["wk"], hkv).reshape(B, Sk, Hk, hd).transpose(0, 2, 1, 3))
+    v = constrain_bhsd(proj(ap["wv"], hkv).reshape(B, Sk, Hk, hd).transpose(0, 2, 1, 3))
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k = apply_rope(k, k_pos, cfg.rope_theta)
+    if causal:
+        o = gqa_attention(q, k, v, q_pos, k_pos, FULL_WINDOW)
+    else:
+        # bidirectional: shift the "causal" mask away by using kpos - max
+        o = gqa_attention(q, k, v, q_pos + Sk, k_pos, FULL_WINDOW)
+    o = o.transpose(0, 2, 1, 3).reshape(B, Sq, H * hd)
+    return jnp.einsum("bse,ed->bsd", o, ap["wo"].astype(dtype),
+                      preferred_element_type=jnp.float32).astype(dtype)
+
+
+def whisper_encode(params, frames: jnp.ndarray, cfg, policy=FULL,
+                   remat: bool = False) -> jnp.ndarray:
+    """frames: (B, S, d) stub embeddings -> encoder memory (B, S, d)."""
+    dtype = policy.compute_dtype
+    h = frames.astype(dtype)
+    S = h.shape[1]
+    pos = jnp.arange(S)
+
+    def block(h, lp):
+        h = constrain_bsd(h)
+        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        h = h + _mha(lp["attn"], hn, hn, pos, pos, False, cfg, dtype)
+        hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + swiglu(lp["ffn"], hn, dtype)
+        return h, None
+
+    if remat:
+        block = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(block, h, params["enc"])
+    return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def whisper_forward(
+    params, frames: jnp.ndarray, dec_tokens: jnp.ndarray, cfg, policy=FULL,
+    remat: bool = False,
+) -> jnp.ndarray:
+    """Training forward: (B,S,d) frames + (B,T) decoder tokens -> logits."""
+    dtype = policy.compute_dtype
+    memory = whisper_encode(params, frames, cfg, policy, remat=remat)
+    h = params["embed"][dec_tokens].astype(dtype)
+    T = h.shape[1]
+    dpos = jnp.arange(T)
+    epos = jnp.arange(memory.shape[1])
+
+    def block(h, lp):
+        h = constrain_bsd(h)
+        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        h = h + _mha(lp["attn"], hn, hn, dpos, dpos, True, cfg, dtype)
+        hn = rmsnorm(h, lp["ln_x"], cfg.norm_eps)
+        h = h + _mha(lp["xattn"], hn, memory, dpos, epos, False, cfg, dtype)
+        hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + swiglu(lp["ffn"], hn, dtype)
+        return h, None
+
+    if remat:
+        block = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(block, h, params["dec"])
+    h = rmsnorm(h, params["dec_norm"], cfg.norm_eps)
+    return jnp.einsum("btd,vd->btv", h.astype(jnp.float32),
+                      params["embed"].astype(jnp.float32))
+
+
+def init_whisper_cache(params, memory: jnp.ndarray, cfg, batch: int,
+                       policy=FULL, dtype=jnp.bfloat16) -> Dict:
+    """Precompute cross-KV from the encoder memory; zero self-KV ring."""
+    cdt = policy.compute_dtype
+    L = cfg.dec_layers or cfg.n_layers
+    S = memory.shape[1]
+    Hk, hd = cfg.n_kv_heads, cfg.hd
+    epos = jnp.arange(S)
+
+    def cross_kv(lp):
+        k = jnp.einsum("bsd,de->bse", memory.astype(cdt), lp["xattn"]["wk"].astype(cdt),
+                       preferred_element_type=jnp.float32)
+        v = jnp.einsum("bsd,de->bse", memory.astype(cdt), lp["xattn"]["wv"].astype(cdt),
+                       preferred_element_type=jnp.float32)
+        k = k.reshape(batch, S, Hk, hd).transpose(0, 2, 1, 3)
+        k = apply_rope(k, epos, cfg.rope_theta)
+        v = v.reshape(batch, S, Hk, hd).transpose(0, 2, 1, 3)
+        return k.astype(dtype), v.astype(dtype)
+
+    xk, xv = jax.vmap(cross_kv)(params["dec"])  # (L, B, Hk, S, hd)
+    W = cfg.max_dec_len
+    return {
+        "step": jnp.zeros((batch,), jnp.int32),
+        "self_k": jnp.zeros((L, batch, Hk, W, hd), dtype),
+        "self_v": jnp.zeros((L, batch, Hk, W, hd), dtype),
+        "self_pos": jnp.full((L, batch, W), -1, jnp.int32),
+        "cross_k": xk,
+        "cross_v": xv,
+        "cross_pos": jnp.broadcast_to(epos, (L, batch, S)),
+    }
+
+
+def whisper_decode_step(params, cache: Dict, tokens: jnp.ndarray, cfg,
+                        policy=FULL) -> Tuple[jnp.ndarray, Dict]:
+    """One decoder token against cached self+cross KV."""
+    dtype = policy.compute_dtype
+    pos = cache["step"]                          # (B,) per-slot clocks
+    h = params["embed"][tokens].astype(dtype)
+    B = h.shape[0]
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    W = cache["self_pos"].shape[-1]
+    slot = jnp.mod(pos, W)                       # (B,)
+    b_idx = jnp.arange(B)
+
+    xs = {k: cache[k] for k in
+          ("self_k", "self_v", "self_pos", "cross_k", "cross_v", "cross_pos")}
+
+    def proj(w, x):
+        return jnp.einsum("bd,de->be", x.astype(dtype), w.astype(dtype),
+                          preferred_element_type=jnp.float32).astype(dtype)
+
+    def block(h, layer_in):
+        lp, lc = layer_in
+        new_lc = dict(lc)
+        # self attention
+        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q = apply_rope_one(proj(lp["attn"]["wq"], hn).reshape(B, H, hd), pos, cfg.rope_theta)[:, :, None, :]
+        k = apply_rope_one(proj(lp["attn"]["wk"], hn).reshape(B, Hk, hd), pos, cfg.rope_theta)
+        v = proj(lp["attn"]["wv"], hn).reshape(B, Hk, hd)
+        sk = lc["self_k"].at[b_idx, :, slot].set(k.astype(lc["self_k"].dtype))
+        sv = lc["self_v"].at[b_idx, :, slot].set(v.astype(lc["self_v"].dtype))
+        sp = lc["self_pos"].at[b_idx, slot].set(pos)
+        o = decode_attention(q, sk.astype(dtype), sv.astype(dtype), sp, pos, FULL_WINDOW)
+        o = o[:, :, 0].reshape(B, H * hd)
+        h = h + jnp.einsum("be,ed->bd", o, lp["attn"]["wo"].astype(dtype),
+                           preferred_element_type=jnp.float32).astype(dtype)
+        new_lc.update({"self_k": sk, "self_v": sv, "self_pos": sp})
+        # cross attention
+        hn = rmsnorm(h, lp["ln_x"], cfg.norm_eps)
+        qx = apply_rope_one(proj(lp["xattn"]["wq"], hn).reshape(B, H, hd), pos, cfg.rope_theta)[:, :, None, :]
+        ox = decode_attention(qx, lc["cross_k"].astype(dtype), lc["cross_v"].astype(dtype),
+                              lc["cross_pos"] * 0, pos * 0, FULL_WINDOW)
+        ox = ox[:, :, 0].reshape(B, H * hd)
+        h = h + jnp.einsum("be,ed->bd", ox, lp["xattn"]["wo"].astype(dtype),
+                           preferred_element_type=jnp.float32).astype(dtype)
+        # ffn
+        hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + swiglu(lp["ffn"], hn, dtype)
+        return h, new_lc
+
+    h, new_xs = jax.lax.scan(block, h, (params["dec"], xs))
+    h = rmsnorm(h, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", h.astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    new_cache = dict(new_xs)
+    new_cache["step"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,111 @@
+"""Spherical FNO (Bonev et al. 2023) on our own SHT substrate.
+
+Block: SHT -> truncate to (lmax, mmax) -> per-degree channel contraction
+``bilm,iol->bolm`` (weights shared over order m, per the spherical
+convolution theorem) -> iSHT, plus a pointwise skip, GELU.
+
+The Legendre transforms and the spectral contraction are GEMMs, so the
+paper's mixed-precision pipeline applies verbatim: tanh pre-activation
+before the SHT, half-precision storage of the spherical spectrum
+(boundary-quantised), contraction at half with f32 accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PrecisionPolicy, FULL, ComplexPair
+from repro.dist.constrain import constrain
+from repro.core.contraction import contract
+from repro.core.precision import quantize_complex
+from repro.core.stabilizer import get_stabilizer
+from .fno import _linear, _linear_init
+from .sht import sht_forward, sht_inverse
+
+
+@dataclasses.dataclass(frozen=True)
+class SFNOConfig:
+    in_channels: int = 3
+    out_channels: int = 3
+    hidden_channels: int = 64
+    n_layers: int = 4
+    nlat: int = 64
+    nlon: int = 128
+    lmax: int = 32
+    mmax: int = 32
+    lifting_channels: int = 128
+    projection_channels: int = 128
+
+
+def init_sfno(key: jax.Array, cfg: SFNOConfig) -> dict:
+    keys = jax.random.split(key, 5)
+    params = {
+        "lift1": _linear_init(keys[0], cfg.in_channels, cfg.lifting_channels),
+        "lift2": _linear_init(keys[1], cfg.lifting_channels, cfg.hidden_channels),
+        "proj1": _linear_init(keys[2], cfg.hidden_channels, cfg.projection_channels),
+        "proj2": _linear_init(keys[3], cfg.projection_channels, cfg.out_channels),
+    }
+    h = cfg.hidden_channels
+    scale = 1.0 / h
+    lkeys = jax.random.split(keys[4], cfg.n_layers)
+    ws, skips = [], []
+    for lk in lkeys:
+        k1, k2, k3 = jax.random.split(lk, 3)
+        ws.append(
+            {
+                "w_re": scale * jax.random.normal(k1, (h, h, cfg.lmax), jnp.float32),
+                "w_im": scale * jax.random.normal(k2, (h, h, cfg.lmax), jnp.float32),
+            }
+        )
+        skips.append(_linear_init(k3, h, h))
+    params["spectral"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ws)
+    params["skips"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *skips)
+    return params
+
+
+def _spherical_conv(h, w, cfg: SFNOConfig, policy: PrecisionPolicy):
+    """h: (B, C, nlat, nlon) -> (B, C, nlat, nlon) via spherical spectrum."""
+    if policy.spectral_is_half and policy.stabilizer:
+        h = get_stabilizer(policy.stabilizer)(h)
+    coeffs = sht_forward(h.astype(jnp.float32), cfg.lmax, cfg.mmax)  # (B,C,l,m)
+    if policy.spectral_is_half:
+        coeffs = quantize_complex(coeffs, policy.spectral_dtype)
+    wc = jax.lax.complex(w["w_re"], w["w_im"])  # (i, o, l)
+    out = contract("bilm,iol->bolm", coeffs, wc, policy=policy)
+    if isinstance(out, ComplexPair):
+        out = out.to_complex()
+    y = sht_inverse(out.astype(jnp.complex64), cfg.nlat, cfg.nlon)
+    if policy.spectral_is_half:
+        y = y.astype(policy.spectral_dtype)
+    return y
+
+
+def sfno_apply(
+    params: dict, x: jnp.ndarray, cfg: SFNOConfig, policy: PrecisionPolicy = FULL
+) -> jnp.ndarray:
+    """x: (B, in_channels, nlat, nlon) -> (B, out_channels, nlat, nlon)."""
+    cdt = policy.compute_dtype
+    h = jnp.moveaxis(x, 1, -1)
+    h = _linear(params["lift1"], h, cdt)
+    h = jax.nn.gelu(h)
+    h = _linear(params["lift2"], h, cdt)
+    h = jnp.moveaxis(h, -1, 1)
+
+    def block(h, layer):
+        h = constrain(h, "dp", "model", None, None)
+        w, skip = layer
+        y = _spherical_conv(h, w, cfg, policy).astype(cdt)
+        s = jnp.moveaxis(_linear(skip, jnp.moveaxis(h, 1, -1), cdt), -1, 1)
+        return jax.nn.gelu(y + s), None
+
+    h = h.astype(cdt)
+    h, _ = jax.lax.scan(block, h, (params["spectral"], params["skips"]))
+
+    h = jnp.moveaxis(h, 1, -1)
+    h = _linear(params["proj1"], h, cdt)
+    h = jax.nn.gelu(h)
+    h = _linear(params["proj2"], h, jnp.float32)
+    return jnp.moveaxis(h, -1, 1)

@@ -1,0 +1,78 @@
+"""Real spherical harmonic transform (SHT) built from scratch:
+longitude FFT + per-order Legendre matmul on a Gauss-Legendre grid.
+
+This is the substrate SFNO (Bonev et al. 2023) needs; torch-harmonics is
+not available in JAX, and re-deriving it makes the spherical path
+matmul-dominant — exactly the structure the paper's mixed-precision
+contraction accelerates (the Legendre transform is a (lat × l) GEMM per
+order m, batched over channels).
+
+Conventions: fully-normalised spherical harmonics Y_lm = P̄_lm(cosθ)e^{imφ}
+with ∫|Y_lm|²dΩ = 1; Gauss-Legendre latitude nodes make the analysis/
+synthesis roundtrip exact for band-limited fields (lmax <= nlat-1).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=16)
+def legendre_matrices(nlat: int, lmax: int, mmax: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Precompute (P, x, w): P[m, l, lat] = P̄_lm(x_lat) (0 for l < m),
+    Gauss-Legendre nodes x and weights w.  float64 numpy for stability."""
+    x, w = np.polynomial.legendre.leggauss(nlat)
+    P = np.zeros((mmax, lmax, nlat), dtype=np.float64)
+    sin2 = 1.0 - x * x
+    # p̄_mm via upward recurrence in m
+    pmm = np.full(nlat, math.sqrt(1.0 / (4.0 * math.pi)))
+    for m in range(mmax):
+        if m > 0:
+            pmm = -np.sqrt((2.0 * m + 1.0) / (2.0 * m)) * np.sqrt(sin2) * pmm
+        if m < lmax:
+            P[m, m] = pmm
+        if m + 1 < lmax:
+            P[m, m + 1] = x * math.sqrt(2.0 * m + 3.0) * pmm
+        for l in range(m + 2, lmax):
+            a = math.sqrt((4.0 * l * l - 1.0) / (l * l - m * m))
+            b = math.sqrt(((l - 1.0) ** 2 - m * m) / (4.0 * (l - 1.0) ** 2 - 1.0))
+            P[m, l] = a * (x * P[m, l - 1] - b * P[m, l - 2])
+    return P, x, w
+
+
+def sht_forward(f: jnp.ndarray, lmax: int, mmax: int) -> jnp.ndarray:
+    """Analysis: f (..., nlat, nlon) real -> coeffs (..., lmax, mmax) complex.
+
+    coeffs[l,m] = Σ_lat w_lat P̄_lm(x_lat) · (2π/nlon)·rfft(f)[lat, m]
+    """
+    nlat, nlon = f.shape[-2], f.shape[-1]
+    P, _, w = legendre_matrices(nlat, lmax, mmax)
+    Pw = jnp.asarray((P * w[None, None, :]), jnp.float32)  # (m, l, lat)
+    Fm = jnp.fft.rfft(f.astype(jnp.float32), axis=-1) * (2.0 * math.pi / nlon)
+    Fm = Fm[..., :mmax]  # (..., lat, m)
+    # coeffs[..., l, m] = Σ_lat Pw[m, l, lat] Fm[..., lat, m]
+    return jnp.einsum("mlt,...tm->...lm", Pw.astype(jnp.complex64), Fm)
+
+
+def sht_inverse(coeffs: jnp.ndarray, nlat: int, nlon: int) -> jnp.ndarray:
+    """Synthesis: coeffs (..., lmax, mmax) -> f (..., nlat, nlon) real."""
+    lmax, mmax = coeffs.shape[-2], coeffs.shape[-1]
+    P, _, _ = legendre_matrices(nlat, lmax, mmax)
+    Pj = jnp.asarray(P, jnp.float32)  # (m, l, lat)
+    G = jnp.einsum("mlt,...lm->...tm", Pj.astype(jnp.complex64), coeffs)
+    nfreq = nlon // 2 + 1
+    if mmax > nfreq:  # orders beyond the grid's Nyquist cannot be realised
+        G = G[..., :nfreq]
+    pad = nfreq - G.shape[-1]
+    if pad > 0:
+        G = jnp.pad(G, [(0, 0)] * (G.ndim - 1) + [(0, pad)])
+    # irfft applies the hermitian doubling and 1/nlon; the real-field
+    # synthesis needs G_0 + 2ReΣ_{m>0} G_m e^{imφ}, i.e. scale by nlon.
+    # (Roundtrip identity: rfft∘irfft = id, quadrature ∫p̄²dx = 1/2π.)
+    f = jnp.fft.irfft(G, n=nlon, axis=-1) * float(nlon)
+    return f

@@ -1,0 +1,103 @@
+"""U-Net baseline (paper Section 4.5 / Table 2).
+
+A standard 2-D conv U-Net used as the non-operator PDE surrogate baseline.
+Kept deliberately conventional so the comparison isolates the operator-vs-
+CNN question, as in the paper: FNO beats U-Net on error, and the paper's
+mixed-precision FNO saves more memory than AMP-on-U-Net.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PrecisionPolicy, FULL
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    in_channels: int = 3
+    out_channels: int = 1
+    base_width: int = 32
+    depth: int = 3
+
+
+def _conv_init(key, cin, cout, k=3):
+    scale = (2.0 / (cin * k * k)) ** 0.5
+    kw, kb = jax.random.split(key)
+    return {
+        "w": scale * jax.random.normal(kw, (cout, cin, k, k), jnp.float32),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _conv(p, x, dtype, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x.astype(dtype),
+        p["w"].astype(dtype),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + p["b"].astype(dtype)[None, :, None, None]
+
+
+def init_unet(key: jax.Array, cfg: UNetConfig) -> dict:
+    params = {"enc": [], "dec": []}
+    w = cfg.base_width
+    keys = jax.random.split(key, 4 * cfg.depth + 4)
+    ki = iter(range(len(keys)))
+    cin = cfg.in_channels
+    enc = []
+    width = w
+    for d in range(cfg.depth):
+        enc.append(
+            {
+                "c1": _conv_init(keys[next(ki)], cin, width),
+                "c2": _conv_init(keys[next(ki)], width, width),
+            }
+        )
+        cin = width
+        width *= 2
+    params["enc"] = enc
+    params["mid1"] = _conv_init(keys[next(ki)], cin, width)
+    params["mid2"] = _conv_init(keys[next(ki)], width, cin)
+    dec = []
+    for d in range(cfg.depth):
+        width = cin // (2 ** d)
+        dec.append(
+            {
+                "c1": _conv_init(keys[next(ki)], width * 2, width),
+                "c2": _conv_init(keys[next(ki)], width, max(width // 2, cfg.base_width)),
+            }
+        )
+    params["dec"] = dec
+    params["head"] = _conv_init(keys[next(ki)], max(width // 2, cfg.base_width), cfg.out_channels, k=1)
+    return params
+
+
+def unet_apply(
+    params: dict, x: jnp.ndarray, cfg: UNetConfig, policy: PrecisionPolicy = FULL
+) -> jnp.ndarray:
+    """x: (B, C, H, W) -> (B, out, H, W).  H, W must be divisible by 2^depth."""
+    cdt = policy.compute_dtype
+    h = x.astype(cdt)
+    skips = []
+    for blk in params["enc"]:
+        h = jax.nn.gelu(_conv(blk["c1"], h, cdt))
+        h = jax.nn.gelu(_conv(blk["c2"], h, cdt))
+        skips.append(h)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+        )
+    h = jax.nn.gelu(_conv(params["mid1"], h, cdt))
+    h = jax.nn.gelu(_conv(params["mid2"], h, cdt))
+    for blk, skip in zip(params["dec"], reversed(skips)):
+        B, C, H, W = h.shape
+        h = jax.image.resize(h, (B, C, H * 2, W * 2), "nearest")
+        h = jnp.concatenate([h, skip.astype(cdt)], axis=1)
+        h = jax.nn.gelu(_conv(blk["c1"], h, cdt))
+        h = jax.nn.gelu(_conv(blk["c2"], h, cdt))
+    return _conv(params["head"], h.astype(jnp.float32), jnp.float32)

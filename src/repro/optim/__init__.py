@@ -1,0 +1,14 @@
+from .adamw import AdamW, AdamWState, all_finite, global_norm  # noqa: F401
+from .loss_scale import (  # noqa: F401
+    LossScaleState,
+    init_loss_scale,
+    scale_loss,
+    unscale_grads,
+    update_loss_scale,
+)
+from .grad_comm import (  # noqa: F401
+    compress_tree,
+    decompress_tree,
+    make_dp_allreduce,
+    psum_compressed,
+)

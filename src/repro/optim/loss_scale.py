@@ -1,0 +1,57 @@
+"""Dynamic loss scaling for the fp16 path.
+
+The paper shows (§B.5, Fig. 10) that loss scaling *alone* cannot rescue a
+naïve half-precision FNO — the forward FFT overflows before the loss is
+even computed, and AMP's scale collapses to an infinitesimal value.  With
+the tanh stabiliser in place, loss scaling resumes its normal job: keeping
+small fp16 *gradients* from flushing to zero.  bf16 policies skip it
+(``PrecisionPolicy.requires_loss_scaling``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import all_finite
+
+
+class LossScaleState(NamedTuple):
+    scale: jnp.ndarray        # f32 scalar
+    good_steps: jnp.ndarray   # int32 scalar
+
+
+def init_loss_scale(initial: float = 2.0 ** 15) -> LossScaleState:
+    return LossScaleState(
+        scale=jnp.asarray(initial, jnp.float32),
+        good_steps=jnp.zeros((), jnp.int32),
+    )
+
+
+def scale_loss(loss: jnp.ndarray, state: LossScaleState) -> jnp.ndarray:
+    return loss * state.scale.astype(loss.dtype)
+
+
+def unscale_grads(grads, state: LossScaleState):
+    inv = 1.0 / state.scale
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * inv, grads)
+
+
+def update_loss_scale(
+    state: LossScaleState,
+    grads_finite: jnp.ndarray,
+    growth_interval: int = 200,
+    growth_factor: float = 2.0,
+    backoff_factor: float = 0.5,
+    max_scale: float = 2.0 ** 24,
+    min_scale: float = 1.0,
+) -> LossScaleState:
+    good = jnp.where(grads_finite, state.good_steps + 1, 0)
+    grow = good >= growth_interval
+    new_scale = jnp.where(
+        grads_finite,
+        jnp.where(grow, jnp.minimum(state.scale * growth_factor, max_scale), state.scale),
+        jnp.maximum(state.scale * backoff_factor, min_scale),
+    )
+    return LossScaleState(scale=new_scale, good_steps=jnp.where(grow, 0, good))

@@ -1,0 +1,123 @@
+"""Batched serving engine: slot-based continuous batching over the
+unified LM decode step.
+
+A fixed pool of B slots holds independent requests; each engine tick runs
+one fused ``lm_decode_step`` for the whole pool (one token per active
+slot).  Finished/empty slots keep decoding padding (masked out) — the
+standard static-shape trick that keeps the step jit-stable while requests
+arrive and depart (continuous batching).  Prefill is chunked through
+``lm_forward`` and its final hidden state seeds the slot's KV cache via
+teacher-forced decode of the prompt (simple, correct; a fused prefill
+kernel is a perf-pass item, §Perf).
+
+This engine is what the decode_32k / long_500k dry-run cells lower: one
+``serve_step`` with a KV cache of seq_len.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PrecisionPolicy, FULL
+from repro.configs.base import LMArchConfig
+from repro.models.lm import init_cache, lm_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        params,
+        cfg: LMArchConfig,
+        n_slots: int = 4,
+        max_len: int = 512,
+        policy: PrecisionPolicy = FULL,
+        greedy: bool = True,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.policy = policy
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.cache = init_cache(cfg, n_slots, max_len)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.slot_pending: List[List[int]] = [[] for _ in range(n_slots)]
+        self._step = jax.jit(
+            lambda p, c, t: lm_decode_step(p, c, t, cfg, policy)
+        )
+
+    # -- admission -----------------------------------------------------------
+    def _reset_slot(self, i: int):
+        """Zero slot i's clock and invalidate its cache rows (continuous
+        batching: other slots keep decoding undisturbed)."""
+        c = dict(self.cache)
+        c["step"] = c["step"].at[i].set(0)
+        if "kv_pos" in c:
+            c["kv_pos"] = c["kv_pos"].at[:, i].set(-1)
+        if "ssd_state" in c:
+            c["ssd_state"] = c["ssd_state"].at[:, i].set(0.0)
+        self.cache = c
+
+    def admit(self, req: Request) -> bool:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req
+                self._reset_slot(i)
+                # feed the prompt token-by-token (teacher forcing) then decode
+                self.slot_pending[i] = list(req.prompt)
+                return True
+        return False
+
+    # -- one engine tick -------------------------------------------------------
+    def tick(self):
+        """Run one fused decode step for the slot pool."""
+        tokens = np.zeros((self.n_slots,), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self.slot_pending[i]:
+                tokens[i] = self.slot_pending[i][0]
+            elif req.generated:
+                tokens[i] = req.generated[-1]
+            else:
+                tokens[i] = req.prompt[-1] if req.prompt else 0
+        logits, self.cache = self._step(self.params, self.cache, jnp.asarray(tokens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self.slot_pending[i]:
+                self.slot_pending[i].pop(0)  # still prefilling this slot
+                if not self.slot_pending[i]:
+                    pass  # prompt consumed; next tick starts generation
+                continue
+            req.generated.append(int(nxt[i]))
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.slots[i] = None  # free the slot (continuous batching)
+
+    def run_until_done(self, requests: List[Request], max_ticks: int = 10_000):
+        queue = list(requests)
+        done: List[Request] = []
+        ticks = 0
+        while (queue or any(self.slots)) and ticks < max_ticks:
+            while queue and self.admit(queue[0]):
+                queue.pop(0)
+            inflight = [r for r in self.slots if r is not None]
+            self.tick()
+            done.extend(r for r in inflight if r.done)
+            ticks += 1
+        return done, ticks

@@ -1,0 +1,49 @@
+"""Losses: relative L² and Sobolev H¹ (the paper trains with H¹ on NS).
+
+H¹ uses spectral derivatives (exact for periodic fields), matching the
+neuraloperator implementation the paper builds on.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def relative_l2(pred: jnp.ndarray, target: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Mean over batch of ||pred - target||₂ / ||target||₂."""
+    axes = tuple(range(1, pred.ndim))
+    num = jnp.sqrt(jnp.sum((pred - target) ** 2, axis=axes))
+    den = jnp.sqrt(jnp.sum(target ** 2, axis=axes)) + eps
+    return jnp.mean(num / den)
+
+
+def _spectral_grad_sq(f: jnp.ndarray) -> jnp.ndarray:
+    """Σ_d ||∂f/∂x_d||² per sample, via FFT (periodic). f: (B, C, *spatial)."""
+    spatial_axes = tuple(range(2, f.ndim))
+    total = 0.0
+    for ax in spatial_axes:
+        n = f.shape[ax]
+        k = jnp.fft.fftfreq(n, d=1.0 / n) * 2.0 * jnp.pi
+        shape = [1] * f.ndim
+        shape[ax] = n
+        fk = jnp.fft.fft(f, axis=ax)
+        df = jnp.fft.ifft(1j * k.reshape(shape) * fk, axis=ax).real
+        total = total + jnp.sum(df ** 2, axis=tuple(range(1, f.ndim)))
+    return total
+
+
+def relative_h1(pred: jnp.ndarray, target: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Relative H¹ = sqrt(||e||² + ||∇e||²) / sqrt(||t||² + ||∇t||²)."""
+    axes = tuple(range(1, pred.ndim))
+    e = pred - target
+    num = jnp.sum(e ** 2, axis=axes) + _spectral_grad_sq(e)
+    den = jnp.sum(target ** 2, axis=axes) + _spectral_grad_sq(target)
+    return jnp.mean(jnp.sqrt(num) / (jnp.sqrt(den) + eps))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Token-mean CE for the LM pool. logits (B,S,V) f32, labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jnp.log(jnp.sum(jnp.exp(logits - logits.max(-1, keepdims=True)), -1))
+    logz = logz + logits.max(-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

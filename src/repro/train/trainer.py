@@ -1,0 +1,208 @@
+"""The training loop: precision schedule, fault tolerance, stragglers.
+
+One Trainer drives any model via a user-supplied
+``loss_fn(params, batch, policy) -> scalar``.
+
+Features (DESIGN.md §4):
+  * **precision schedule** (paper §4.4): each schedule phase owns its own
+    jitted train step (dtype changes require recompiles — at most 2/run);
+  * **dynamic loss scaling + skip-step** for fp16 phases: non-finite
+    gradients skip the update and halve the scale (lax.cond, fully jitted);
+  * **checkpoint/restart**: async atomic checkpoints every ``ckpt_every``;
+    ``Trainer.restore()`` resumes bit-compatible (data pipeline is
+    stateless so only (params, opt, scale, step) need storage);
+  * **preemption**: SIGTERM sets a flag; the loop checkpoints at the next
+    step boundary and exits cleanly;
+  * **straggler monitor**: EWMA of step wall-time; steps slower than
+    ``straggler_factor``× the EWMA are counted and surfaced through
+    ``Trainer.stats`` (on multi-host this hook feeds the re-scheduler);
+  * **grad accumulation** via ``lax.scan`` over microbatches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PrecisionPolicy, PrecisionSchedule, get_policy
+from repro.optim import (
+    AdamW,
+    AdamWState,
+    all_finite,
+    init_loss_scale,
+    scale_loss,
+    unscale_grads,
+    update_loss_scale,
+)
+from . import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    schedule: PrecisionSchedule = dataclasses.field(
+        default_factory=lambda: PrecisionSchedule.constant("full")
+    )
+    optimizer: AdamW = dataclasses.field(default_factory=AdamW)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_last_k: int = 3
+    microbatches: int = 1
+    straggler_factor: float = 3.0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        loss_fn: Callable[[Any, Dict, PrecisionPolicy], jnp.ndarray],
+        params: Any,
+        config: TrainerConfig,
+    ):
+        self.loss_fn = loss_fn
+        # own the parameter buffers: the jitted step donates them
+        # (donate_argnums), which would delete a caller-shared pytree.
+        self.params = jax.tree_util.tree_map(jnp.copy, params)
+        self.cfg = config
+        self.opt_state = config.optimizer.init(params)
+        self.scale_state = init_loss_scale()
+        self.step = 0
+        self.history: list = []
+        self.stats = {"straggler_steps": 0, "skipped_steps": 0, "recompiles": 0}
+        self._steps_cache: Dict[str, Callable] = {}
+        self._preempted = False
+        self._ckptr = (
+            ckpt_lib.AsyncCheckpointer(config.ckpt_dir, config.keep_last_k)
+            if config.ckpt_dir
+            else None
+        )
+
+    # -- fault tolerance ----------------------------------------------------
+    def install_preemption_handler(self, signum=signal.SIGTERM):
+        signal.signal(signum, lambda *_: self._on_preempt())
+
+    def _on_preempt(self):
+        self._preempted = True
+
+    def save(self):
+        if self._ckptr is None:
+            return
+        state = {
+            "params": self.params,
+            "opt": self.opt_state,
+            "scale": self.scale_state,
+            "step": jnp.asarray(self.step),
+        }
+        self._ckptr.save(self.step, state)
+
+    def restore(self) -> bool:
+        if self.cfg.ckpt_dir is None or ckpt_lib.latest_step(self.cfg.ckpt_dir) is None:
+            return False
+        target = {
+            "params": self.params,
+            "opt": self.opt_state,
+            "scale": self.scale_state,
+            "step": jnp.asarray(self.step),
+        }
+        state, _ = ckpt_lib.restore(self.cfg.ckpt_dir, target)
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self.scale_state = state["scale"]
+        self.step = int(state["step"])
+        return True
+
+    # -- compiled step per policy --------------------------------------------
+    def _build_step(self, policy: PrecisionPolicy) -> Callable:
+        opt = self.cfg.optimizer
+        nmicro = self.cfg.microbatches
+        use_scaling = policy.requires_loss_scaling
+
+        def micro_grads(params, batch, scale_state):
+            def scaled_loss(p, b):
+                loss = self.loss_fn(p, b, policy)
+                return scale_loss(loss, scale_state) if use_scaling else loss
+
+            if nmicro == 1:
+                loss, grads = jax.value_and_grad(scaled_loss)(params, batch)
+                return loss, grads
+            # split the leading batch axis into microbatches and scan
+            def resplit(x):
+                return x.reshape(nmicro, x.shape[0] // nmicro, *x.shape[1:])
+
+            mb = jax.tree_util.tree_map(resplit, batch)
+
+            def body(carry, b):
+                acc_loss, acc_g = carry
+                loss, g = jax.value_and_grad(scaled_loss)(params, b)
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                return (acc_loss + loss, acc_g), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_g), mb
+            )
+            inv = 1.0 / nmicro
+            return loss * inv, jax.tree_util.tree_map(lambda g: g * inv, grads)
+
+        def train_step(params, opt_state, scale_state, batch):
+            loss, grads = micro_grads(params, batch, scale_state)
+            if use_scaling:
+                grads = unscale_grads(grads, scale_state)
+                loss = loss / scale_state.scale
+            finite = all_finite(grads)
+
+            def do_update(_):
+                return opt.update(grads, opt_state, params)
+
+            def skip(_):
+                return params, opt_state
+
+            new_params, new_opt = jax.lax.cond(finite, do_update, skip, None)
+            new_scale = (
+                update_loss_scale(scale_state, finite) if use_scaling else scale_state
+            )
+            return new_params, new_opt, new_scale, loss, finite
+
+        return jax.jit(train_step, donate_argnums=(0, 1))
+
+    def _step_fn(self, policy: PrecisionPolicy) -> Callable:
+        if policy.name not in self._steps_cache:
+            self._steps_cache[policy.name] = self._build_step(policy)
+            self.stats["recompiles"] += 1
+        return self._steps_cache[policy.name]
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, batch_fn: Callable[[int], Dict], steps: Optional[int] = None):
+        """batch_fn(step) -> batch pytree (stateless pipeline contract)."""
+        total = steps if steps is not None else self.cfg.total_steps
+        ewma = None
+        while self.step < total and not self._preempted:
+            policy = self.cfg.schedule.policy_at(self.step, self.cfg.total_steps)
+            fn = self._step_fn(policy)
+            batch = batch_fn(self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, self.scale_state, loss, finite = fn(
+                self.params, self.opt_state, self.scale_state, batch
+            )
+            loss = float(loss)
+            dt = time.perf_counter() - t0
+            if not bool(finite):
+                self.stats["skipped_steps"] += 1
+            if ewma is not None and dt > self.cfg.straggler_factor * ewma:
+                self.stats["straggler_steps"] += 1
+            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            self.history.append({"step": self.step, "loss": loss, "policy": policy.name, "dt": dt})
+            self.step += 1
+            if self._ckptr is not None and self.step % self.cfg.ckpt_every == 0:
+                self.save()
+        if self._preempted and self._ckptr is not None:
+            self.save()
+        if self._ckptr is not None:
+            self._ckptr.wait()
+        return self.history

@@ -1,0 +1,177 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED config of each family and run one forward + one train step on CPU,
+asserting output shapes and no NaNs.  Also decode-step smoke per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import AMP_BF16, FULL
+from repro.data import lm_inputs
+from repro.models.lm import (
+    init_cache,
+    init_lm,
+    init_whisper,
+    init_whisper_cache,
+    lm_decode_step,
+    lm_forward,
+    whisper_decode_step,
+    whisper_encode,
+    whisper_forward,
+)
+from repro.train.losses import cross_entropy
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 32
+
+
+def _decoder_batch(cfg):
+    return lm_inputs(0, 0, B, S, cfg.vocab)
+
+
+def _forward(cfg, params, batch, policy=FULL):
+    if cfg.encoder_decoder:
+        frames = jnp.ones((B, S, cfg.d_model), jnp.float32) * 0.1
+        dec = batch["tokens"][:, : cfg.max_dec_len]
+        return whisper_forward(params, frames, dec, cfg, policy)
+    if cfg.frontend == "vision_stub":
+        patches = jnp.ones((B, cfg.n_patches, cfg.d_model), jnp.float32) * 0.1
+        logits, _ = lm_forward(params, batch["tokens"], cfg, policy,
+                               patch_embeds=patches)
+        return logits
+    logits, _ = lm_forward(params, batch["tokens"], cfg, policy)
+    return logits
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    init = init_whisper if cfg.encoder_decoder else init_lm
+    params = init(jax.random.PRNGKey(0), cfg)
+    batch = _decoder_batch(cfg)
+    logits = _forward(cfg, params, batch)
+    exp_s = min(cfg.max_dec_len, S) if cfg.encoder_decoder else (
+        S + cfg.n_patches if cfg.frontend == "vision_stub" else S
+    )
+    assert logits.shape == (B, exp_s, cfg.vocab), logits.shape
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    init = init_whisper if cfg.encoder_decoder else init_lm
+    params = init(jax.random.PRNGKey(1), cfg)
+    batch = _decoder_batch(cfg)
+
+    def loss_fn(p):
+        logits = _forward(cfg, p, batch, AMP_BF16)
+        if cfg.frontend == "vision_stub":
+            logits = logits[:, cfg.n_patches :]  # loss on text positions
+        T = min(logits.shape[1], batch["labels"].shape[1])
+        return cross_entropy(logits[:, :T], batch["labels"][:, :T])
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    # gradient must reach the embedding at least
+    assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0 for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.encoder_decoder:
+        params = init_whisper(jax.random.PRNGKey(2), cfg)
+        frames = jnp.ones((B, S, cfg.d_model), jnp.float32) * 0.1
+        memory = whisper_encode(params, frames, cfg)
+        cache = init_whisper_cache(params, memory, cfg, B)
+        tok = jnp.zeros((B,), jnp.int32)
+        for _ in range(3):
+            logits, cache = whisper_decode_step(params, cache, tok, cfg)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        assert logits.shape == (B, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        return
+    params = init_lm(jax.random.PRNGKey(2), cfg)
+    cache = init_cache(cfg, B, max_len=64)
+    tok = jnp.zeros((B,), jnp.int32)
+    for _ in range(3):
+        logits, cache = lm_decode_step(params, cache, tok, cfg)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert int(cache["step"][0]) == 3
+
+
+class TestDecodeMatchesForward:
+    """Decode-step logits must match the full forward at each position —
+    the KV-cache correctness contract (dense + MLA + SSD paths)."""
+
+    @pytest.mark.parametrize("arch", ["smollm-360m", "deepseek-v2-lite-16b", "mamba2-370m", "hymba-1.5b"])
+    def test_match(self, arch):
+        import dataclasses
+
+        cfg = get_config(arch, smoke=True)
+        if cfg.moe_experts:
+            # MoE capacity drops are batch-dependent (an 8-token forward can
+            # drop tokens a 1-token decode wouldn't) — test the cache logic
+            # with a no-drop capacity.
+            cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+        params = init_lm(jax.random.PRNGKey(3), cfg)
+        T = 8
+        toks = jnp.asarray(np.random.RandomState(0).randint(0, cfg.vocab, (1, T)))
+        full_logits, _ = lm_forward(params, toks, cfg, FULL)
+        cache = init_cache(cfg, 1, max_len=T)
+        outs = []
+        for t in range(T):
+            lg, cache = lm_decode_step(params, cache, toks[:, t], cfg, FULL)
+            outs.append(lg)
+        dec_logits = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(dec_logits), np.asarray(full_logits), rtol=2e-2, atol=2e-2
+        )
+
+
+class TestSSDCorrectness:
+    def test_chunked_matches_sequential(self):
+        """The chunked SSD must equal the naive per-step recurrence."""
+        from repro.models.lm.ssd import init_ssd, ssd_forward, ssd_decode_step
+
+        cfg = get_config("mamba2-370m", smoke=True)
+        params = init_ssd(jax.random.PRNGKey(4), cfg.d_model, cfg.d_inner,
+                          cfg.ssm_heads, cfg.ssm_state)
+        rng = np.random.RandomState(1)
+        u = jnp.asarray(rng.randn(2, 24, cfg.d_model) * 0.3, jnp.float32)
+        y_chunked = np.asarray(ssd_forward(params, u, cfg, FULL))
+        # sequential reference via the decode step
+        state = jnp.zeros((2, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state))
+        ys = []
+        for t in range(24):
+            y, state = ssd_decode_step(params, u[:, t], state, cfg, FULL)
+            ys.append(y)
+        y_seq = np.stack([np.asarray(y) for y in ys], axis=1)
+        np.testing.assert_allclose(y_chunked, y_seq, rtol=2e-3, atol=2e-3)
+
+
+class TestMoE:
+    def test_moe_routes_and_combines(self):
+        from repro.models.lm.moe import init_moe, moe_apply
+
+        params = init_moe(jax.random.PRNGKey(5), 32, 4, 64, 0, 0)
+        x = jnp.asarray(np.random.RandomState(2).randn(64, 32), jnp.float32)
+        out, aux = moe_apply(params, x, top_k=2, capacity_factor=2.0, dtype=jnp.float32)
+        assert out.shape == (64, 32)
+        assert np.isfinite(np.asarray(out)).all()
+        assert float(aux) > 0.0
+
+    def test_moe_capacity_drops_gracefully(self):
+        from repro.models.lm.moe import init_moe, moe_apply
+
+        params = init_moe(jax.random.PRNGKey(6), 16, 4, 32, 0, 0)
+        x = jnp.asarray(np.random.RandomState(3).randn(128, 16), jnp.float32)
+        out, _ = moe_apply(params, x, top_k=2, capacity_factor=0.25, dtype=jnp.float32)
+        assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,201 @@
+"""Unit + property tests for repro.core.precision and contraction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ComplexPair,
+    FULL,
+    MIXED_FNO_BF16,
+    MIXED_FNO_FP16,
+    PathCache,
+    PrecisionSystem,
+    contract,
+    get_policy,
+    greedy_path,
+    path_flops,
+    path_intermediate_bytes,
+    precision_system_for,
+    quantize_complex,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# (a0, eps, T)-precision system
+# ---------------------------------------------------------------------------
+
+
+class TestPrecisionSystem:
+    def test_quantize_relative_error_bounded(self):
+        q = precision_system_for("float16")
+        x = jnp.asarray(np.random.RandomState(0).uniform(0.01, 100.0, size=512))
+        qx = q.quantize(x)
+        rel = np.abs(np.asarray(qx) - np.asarray(x)) / np.asarray(x)
+        # nearest grid point => relative error <= eps/2 (up to rounding slack)
+        assert rel.max() <= q.eps * 0.51 + 1e-12
+
+    def test_underflow_to_zero(self):
+        q = precision_system_for("float16")
+        tiny = jnp.asarray([q.a0 / 4.0, -q.a0 / 4.0])
+        assert np.all(np.asarray(q.quantize(tiny)) == 0.0)
+
+    def test_sign_preserved(self):
+        q = precision_system_for("float16")
+        x = jnp.asarray([-3.0, 3.0])
+        qx = np.asarray(q.quantize(x))
+        assert qx[0] < 0 < qx[1]
+
+    @given(st.floats(min_value=1e-3, max_value=1e3, allow_nan=False))
+    @settings(max_examples=50, deadline=None)
+    def test_property_quantize_close(self, v):
+        q = precision_system_for("float16")
+        qv = float(q.quantize(jnp.asarray([v]))[0])
+        assert abs(qv - v) <= q.eps * v + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# ComplexPair
+# ---------------------------------------------------------------------------
+
+
+class TestComplexPair:
+    def test_roundtrip(self):
+        rng = np.random.RandomState(0)
+        c = rng.randn(4, 8) + 1j * rng.randn(4, 8)
+        pair = ComplexPair.from_complex(jnp.asarray(c, jnp.complex64), jnp.float32)
+        np.testing.assert_allclose(np.asarray(pair.to_complex()), c, rtol=1e-6)
+
+    def test_half_roundtrip_error_small(self):
+        rng = np.random.RandomState(1)
+        c = (rng.randn(64) + 1j * rng.randn(64)).astype(np.complex64)
+        q = quantize_complex(jnp.asarray(c), jnp.float16)
+        err = np.abs(np.asarray(q) - c)
+        assert err.max() < 2e-3  # fp16 relative precision on O(1) data
+
+    def test_mul_matches_complex(self):
+        rng = np.random.RandomState(2)
+        a = rng.randn(16) + 1j * rng.randn(16)
+        b = rng.randn(16) + 1j * rng.randn(16)
+        pa = ComplexPair.from_complex(jnp.asarray(a, jnp.complex64), jnp.float32)
+        pb = ComplexPair.from_complex(jnp.asarray(b, jnp.complex64), jnp.float32)
+        np.testing.assert_allclose(np.asarray((pa * pb).to_complex()), a * b, rtol=1e-5)
+
+    def test_is_pytree(self):
+        pair = ComplexPair(jnp.ones(3), jnp.zeros(3))
+        leaves = jax.tree_util.tree_leaves(pair)
+        assert len(leaves) == 2
+        out = jax.jit(lambda p: p * 2.0)(pair)
+        np.testing.assert_allclose(np.asarray(out.re), 2.0)
+
+
+# ---------------------------------------------------------------------------
+# Greedy contraction path
+# ---------------------------------------------------------------------------
+
+
+class TestGreedyPath:
+    def test_matmul_chain_order(self):
+        # (2x1000) @ (1000x2) @ (2x1000): memory-greedy contracts the small
+        # intermediate first.
+        expr = "ab,bc,cd->ad"
+        shapes = [(2, 1000), (1000, 2), (2, 1000)]
+        path = greedy_path(expr, shapes, "memory")
+        peak = path_intermediate_bytes(expr, shapes, path)
+        assert peak == 2 * 2 * 4  # (a,c) intermediate = 2x2 floats
+
+    def test_memory_vs_flops_paths_differ(self):
+        # Engineered so the FLOP-optimal order creates a larger intermediate.
+        expr = "ab,bc,cd->ad"
+        shapes = [(8, 4), (4, 1024), (1024, 2)]
+        p_mem = greedy_path(expr, shapes, "memory")
+        p_flop = greedy_path(expr, shapes, "flops")
+        mem_peak = path_intermediate_bytes(expr, shapes, p_mem)
+        flop_peak = path_intermediate_bytes(expr, shapes, p_flop)
+        assert mem_peak <= flop_peak
+
+    def test_path_cache_hit(self):
+        cache = PathCache()
+        expr = "ab,bc->ac"
+        shapes = [(3, 4), (4, 5)]
+        cache.get(expr, shapes, "memory")
+        cache.get(expr, shapes, "memory")
+        assert cache.hits == 1 and cache.misses == 1
+
+    @given(
+        st.integers(min_value=1, max_value=6),
+        st.integers(min_value=1, max_value=6),
+        st.integers(min_value=1, max_value=6),
+        st.integers(min_value=1, max_value=6),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_chain_correct(self, a, b, c, d):
+        rng = np.random.RandomState(a * 7 + b)
+        A = jnp.asarray(rng.randn(a, b), jnp.float32)
+        B = jnp.asarray(rng.randn(b, c), jnp.float32)
+        C = jnp.asarray(rng.randn(c, d), jnp.float32)
+        got = contract("ab,bc,cd->ad", A, B, C, policy=FULL)
+        want = np.einsum("ab,bc,cd->ad", A, B, C)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision contraction executor
+# ---------------------------------------------------------------------------
+
+
+class TestContract:
+    def _rand_complex(self, rng, shape):
+        return jnp.asarray(rng.randn(*shape) + 1j * rng.randn(*shape), jnp.complex64)
+
+    def test_full_matches_einsum_complex(self):
+        rng = np.random.RandomState(0)
+        x = self._rand_complex(rng, (2, 3, 4, 4))
+        w = self._rand_complex(rng, (3, 5, 4, 4))
+        got = contract("bixy,ioxy->boxy", x, w, policy=FULL)
+        want = np.einsum("bixy,ioxy->boxy", np.asarray(x), np.asarray(w))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("policy_name", ["mixed_fno_fp16", "mixed_fno_bf16"])
+    def test_half_close_to_full(self, policy_name):
+        rng = np.random.RandomState(3)
+        x = self._rand_complex(rng, (2, 8, 6, 6))
+        w = self._rand_complex(rng, (8, 8, 6, 6)) * 0.1
+        policy = get_policy(policy_name)
+        got = contract("bixy,ioxy->boxy", x, w, policy=policy)
+        got = got.to_complex() if hasattr(got, "to_complex") else got
+        want = np.einsum("bixy,ioxy->boxy", np.asarray(x), np.asarray(w))
+        rel = np.abs(np.asarray(got) - want) / (np.abs(want) + 1e-3)
+        assert rel.mean() < 2e-2  # half-precision storage error only
+
+    def test_cp_multi_operand(self):
+        # TFNO's CP contraction: bixy,r,ir,or,xr,yr->boxy
+        rng = np.random.RandomState(4)
+        b, i, o, x_, y_, r = 2, 4, 5, 3, 3, 6
+        X = self._rand_complex(rng, (b, i, x_, y_))
+        lam = self._rand_complex(rng, (r,))
+        Ui = self._rand_complex(rng, (i, r))
+        Uo = self._rand_complex(rng, (o, r))
+        Ux = self._rand_complex(rng, (x_, r))
+        Uy = self._rand_complex(rng, (y_, r))
+        got = contract("bixy,r,ir,or,xr,yr->boxy", X, lam, Ui, Uo, Ux, Uy, policy=FULL)
+        want = np.einsum(
+            "bixy,r,ir,or,xr,yr->boxy",
+            *[np.asarray(t) for t in (X, lam, Ui, Uo, Ux, Uy)],
+        )
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+    def test_contract_jittable(self):
+        rng = np.random.RandomState(5)
+        x = self._rand_complex(rng, (2, 3, 4, 4))
+        w = self._rand_complex(rng, (3, 5, 4, 4))
+        f = jax.jit(lambda a, b: contract("bixy,ioxy->boxy", a, b, policy=FULL))
+        np.testing.assert_allclose(
+            np.asarray(f(x, w)),
+            np.einsum("bixy,ioxy->boxy", np.asarray(x), np.asarray(w)),
+            rtol=1e-5,
+            atol=1e-5,
+        )

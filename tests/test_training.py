@@ -1,0 +1,212 @@
+"""Training substrate tests: optimizer, loss scaling, trainer loop,
+checkpoint/restart, preemption, precision schedule, grad compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FULL, PrecisionSchedule, get_policy
+from repro.models import FNOConfig, fno_apply, init_fno
+from repro.optim import (
+    AdamW,
+    all_finite,
+    compress_tree,
+    init_loss_scale,
+    scale_loss,
+    unscale_grads,
+    update_loss_scale,
+)
+from repro.train import Trainer, TrainerConfig, checkpoint, relative_h1, relative_l2
+from repro.train.losses import cross_entropy
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestLosses:
+    def test_relative_l2_zero_on_equal(self):
+        x = jnp.ones((2, 1, 8, 8))
+        assert float(relative_l2(x, x)) < 1e-6
+
+    def test_relative_h1_penalises_gradient_error(self):
+        t = jnp.zeros((1, 1, 32, 32))
+        xx = jnp.linspace(0, 2 * np.pi, 32, endpoint=False)
+        smooth = 0.1 * jnp.ones((1, 1, 32, 32))
+        wiggly = 0.1 * jnp.sin(8 * xx)[None, None, :, None] * jnp.ones((1, 1, 32, 32))
+        t1 = jnp.ones((1, 1, 32, 32))  # target with unit norm
+        assert float(relative_h1(wiggly, t1)) > float(relative_h1(smooth, t1))
+
+    def test_cross_entropy_matches_uniform(self):
+        logits = jnp.zeros((2, 3, 7))
+        labels = jnp.zeros((2, 3), jnp.int32)
+        np.testing.assert_allclose(float(cross_entropy(logits, labels)), np.log(7), rtol=1e-5)
+
+
+class TestAdamW:
+    def test_converges_quadratic(self):
+        opt = AdamW(lr=0.1, weight_decay=0.0)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = opt.init(params)
+        loss = lambda p: jnp.sum(p["w"] ** 2)
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, state = opt.update(g, state, params)
+        assert float(loss(params)) < 1e-3
+
+    def test_grad_clip(self):
+        opt = AdamW(lr=0.0, grad_clip_norm=1.0)
+        params = {"w": jnp.zeros(3)}
+        state = opt.init(params)
+        g = {"w": jnp.asarray([1e6, 0.0, 0.0])}
+        new_params, new_state = opt.update(g, state, params)
+        assert float(jnp.abs(new_state.mu["w"]).max()) <= 0.2  # clipped to norm 1
+
+    def test_half_grads_upcast(self):
+        opt = AdamW(lr=0.1)
+        params = {"w": jnp.ones(2)}
+        state = opt.init(params)
+        g = {"w": jnp.ones(2, jnp.bfloat16)}
+        new_params, _ = opt.update(g, state, params)
+        assert new_params["w"].dtype == jnp.float32
+
+
+class TestLossScale:
+    def test_scale_unscale_roundtrip(self):
+        s = init_loss_scale(1024.0)
+        grads = {"w": jnp.asarray([2.0])}
+        scaled = jax.tree_util.tree_map(lambda g: g * s.scale, grads)
+        back = unscale_grads(scaled, s)
+        np.testing.assert_allclose(np.asarray(back["w"]), [2.0])
+
+    def test_backoff_on_nonfinite(self):
+        s = init_loss_scale(1024.0)
+        s2 = update_loss_scale(s, jnp.asarray(False))
+        assert float(s2.scale) == 512.0
+
+    def test_growth_after_interval(self):
+        s = init_loss_scale(8.0)
+        for _ in range(200):
+            s = update_loss_scale(s, jnp.asarray(True), growth_interval=200)
+        assert float(s.scale) == 16.0
+
+
+def _tiny_problem():
+    cfg = FNOConfig(
+        in_channels=1, out_channels=1, hidden_channels=8,
+        lifting_channels=8, projection_channels=8, n_layers=1, modes=(4, 4),
+    )
+    params = init_fno(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(4, 1, 16, 16), jnp.float32)
+    t = jnp.asarray(rng.randn(4, 1, 16, 16) * 0.1, jnp.float32)
+
+    def loss_fn(p, batch, policy):
+        y = fno_apply(p, batch["x"], cfg, policy)
+        return relative_l2(y, batch["t"])
+
+    batch_fn = lambda step: {"x": x, "t": t}
+    return params, loss_fn, batch_fn
+
+
+class TestTrainer:
+    def test_loss_decreases(self):
+        params, loss_fn, batch_fn = _tiny_problem()
+        tr = Trainer(loss_fn, params, TrainerConfig(total_steps=15))
+        hist = tr.run(batch_fn)
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+    def test_precision_schedule_switches(self):
+        params, loss_fn, batch_fn = _tiny_problem()
+        sched = PrecisionSchedule(
+            phases=((0.4, "mixed_fno_bf16"), (1.0, "full"))
+        )
+        tr = Trainer(loss_fn, params, TrainerConfig(total_steps=10, schedule=sched))
+        hist = tr.run(batch_fn)
+        policies = [h["policy"] for h in hist]
+        assert policies[0] == "mixed_fno_bf16" and policies[-1] == "full"
+        assert tr.stats["recompiles"] == 2
+
+    def test_fp16_loss_scaling_runs(self):
+        params, loss_fn, batch_fn = _tiny_problem()
+        sched = PrecisionSchedule.constant("mixed_fno_fp16")
+        tr = Trainer(loss_fn, params, TrainerConfig(total_steps=5, schedule=sched))
+        hist = tr.run(batch_fn)
+        assert np.isfinite([h["loss"] for h in hist]).all()
+
+    def test_microbatch_equivalence(self):
+        """grad accumulation over 2 microbatches ~ full-batch gradient."""
+        params, loss_fn, batch_fn = _tiny_problem()
+        t1 = Trainer(loss_fn, params, TrainerConfig(total_steps=3, microbatches=1))
+        t2 = Trainer(loss_fn, params, TrainerConfig(total_steps=3, microbatches=2))
+        h1 = t1.run(batch_fn)
+        h2 = t2.run(batch_fn)
+        np.testing.assert_allclose(h1[0]["loss"], h2[0]["loss"], rtol=1e-4)
+
+    def test_checkpoint_restart(self, tmp_path):
+        params, loss_fn, batch_fn = _tiny_problem()
+        d = str(tmp_path / "ck")
+        tr = Trainer(loss_fn, params, TrainerConfig(total_steps=10, ckpt_dir=d, ckpt_every=5))
+        tr.run(batch_fn, steps=7)
+        tr._ckptr.wait()
+        # fresh trainer, restore, continue
+        tr2 = Trainer(loss_fn, params, TrainerConfig(total_steps=10, ckpt_dir=d, ckpt_every=5))
+        assert tr2.restore()
+        assert tr2.step == 5
+        tr2.run(batch_fn)
+        assert tr2.step == 10
+
+    def test_preemption_checkpoints_and_stops(self, tmp_path):
+        params, loss_fn, batch_fn = _tiny_problem()
+        d = str(tmp_path / "ck2")
+        tr = Trainer(loss_fn, params, TrainerConfig(total_steps=100, ckpt_dir=d, ckpt_every=1000))
+        # simulate SIGTERM after 3 steps via wrapping batch_fn
+        def preempting_batch(step):
+            if step == 3:
+                tr._on_preempt()
+            return batch_fn(step)
+        tr.run(preempting_batch)
+        assert tr.step <= 4
+        assert checkpoint.latest_step(d) is not None
+
+
+class TestCheckpoint:
+    def test_atomic_save_restore(self, tmp_path):
+        d = str(tmp_path / "c")
+        tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 2))}}
+        checkpoint.save(d, 3, tree)
+        restored, step = checkpoint.restore(d, tree)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(5.0))
+
+    def test_keep_last_k(self, tmp_path):
+        d = str(tmp_path / "c")
+        tree = {"a": jnp.zeros(1)}
+        for s in range(6):
+            checkpoint.save(d, s, tree, keep_last_k=2)
+        assert checkpoint.latest_step(d) == 5
+        dirs = [x for x in os.listdir(d) if x.startswith("step_")]
+        assert len(dirs) == 2
+
+    def test_elastic_restore_with_sharding(self, tmp_path):
+        """Restore re-shards onto the current mesh (1-device here)."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        d = str(tmp_path / "c")
+        tree = {"w": jnp.arange(8.0)}
+        checkpoint.save(d, 0, tree)
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        sh = {"w": NamedSharding(mesh, P())}
+        restored, _ = checkpoint.restore(d, tree, shardings=sh)
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8.0))
+
+
+class TestGradCompression:
+    def test_bf16_compression_small_error(self):
+        rng = np.random.RandomState(0)
+        g = {"w": jnp.asarray(rng.randn(1000), jnp.float32)}
+        c = compress_tree(g)
+        err = np.abs(np.asarray(c["w"], np.float32) - np.asarray(g["w"]))
+        rel = err / (np.abs(np.asarray(g["w"])) + 1e-9)
+        assert rel.mean() < 5e-3
+        assert c["w"].dtype == jnp.bfloat16
