@@ -97,13 +97,10 @@ def precision_system_for(fmt: str) -> PrecisionSystem:
 
 
 def simulate_fp8(x: jnp.ndarray, fmt: str = "fp8_e5m2") -> jnp.ndarray:
-    """Simulated fp8 via clipping + coarse quantisation (Appendix B.11)."""
-    vmax = FORMAT_MAX[fmt]
-    eps = FORMAT_EPS[fmt]
-    clipped = jnp.clip(x, -vmax, vmax)
-    # quantise mantissa by round-tripping through a scaled grid
-    scale = 1.0 / eps
-    return jnp.round(clipped * scale) / scale if fmt == "__linear__" else _round_mantissa(clipped, fmt)
+    """Simulated fp8: clip to the format's range, round the mantissa
+    (Appendix B.11)."""
+    clipped = jnp.clip(x, -FORMAT_MAX[fmt], FORMAT_MAX[fmt])
+    return _round_mantissa(clipped, fmt)
 
 
 def _round_mantissa(x: jnp.ndarray, fmt: str) -> jnp.ndarray:

@@ -1,0 +1,33 @@
+"""repro.dist — declarative distribution layer.
+
+Two halves, one rule table:
+
+* :mod:`repro.dist.constrain` — ambient-mesh ``with_sharding_constraint``
+  wrappers taking *logical* axis names, used inside models.
+* :mod:`repro.dist.sharding` — pytree spec derivation with
+  divisibility-checked fallback chains, used by launch / serving code.
+
+Models never name a physical mesh axis; the logical->physical mapping
+lives in :mod:`repro.dist.rules` and is overridable per scope.
+"""
+from .constrain import (  # noqa: F401
+    ambient_mesh,
+    constrain,
+    constrain_bhsd,
+    constrain_bsd,
+    constrain_spatial,
+    constrain_tokens,
+    logical_axis_size,
+    use_mesh,
+)
+from .rules import DEFAULT_RULES, axis_rules, current_rules  # noqa: F401
+from .sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    fno_param_specs,
+    lm_param_specs,
+    pick_spec,
+    replication_report,
+    to_named,
+)

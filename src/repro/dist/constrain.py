@@ -1,0 +1,152 @@
+"""Ambient-mesh sharding constraints with logical axis names.
+
+``constrain(x, *spec)`` is ``with_sharding_constraint`` that
+
+* reads the mesh from the ambient context (``with mesh:`` /
+  :func:`use_mesh`) instead of a threaded argument,
+* accepts *logical* axis names ("dp", "tp", "seq", ...) or tuples of
+  them per dimension, resolved through :mod:`repro.dist.rules`,
+* no-ops gracefully when there is no mesh, the mesh is trivial, or a
+  requested axis does not divide the dimension (the longest divisible
+  prefix of the resolved axes is kept).
+
+Models therefore never name a physical mesh axis; the shape helpers
+(`constrain_bsd`, `constrain_bhsd`, `constrain_tokens`,
+`constrain_spatial`) additionally own the standard layout decisions for
+their tensor shapes so call sites stay one line.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Iterator, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .rules import Entry, normalize_entry, resolve_axes
+
+
+def ambient_mesh() -> Optional[Mesh]:
+    """The mesh of the enclosing ``with mesh:`` scope, or None."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - jax internals moved
+        try:
+            from jax.interpreters.pxla import thread_resources
+
+            m = thread_resources.env.physical_mesh
+        except Exception:
+            return None
+    if m is None or m.empty:
+        return None
+    return m
+
+
+@contextmanager
+def use_mesh(mesh: Optional[Mesh]) -> Iterator[Optional[Mesh]]:
+    """Declarative entry point: make ``mesh`` ambient for the scope.
+
+    ``use_mesh(None)`` is a no-op scope, so launch code can be written
+    unconditionally: ``with use_mesh(maybe_mesh): ...``.
+    """
+    if mesh is None:
+        yield None
+    else:
+        with mesh:
+            yield mesh
+
+
+def logical_axis_size(names: Union[str, tuple], mesh: Optional[Mesh] = None) -> int:
+    """Product of the mesh sizes of the resolved physical axes (1 off-mesh)."""
+    mesh = mesh if mesh is not None else ambient_mesh()
+    if mesh is None:
+        return 1
+    size = 1
+    for ax in resolve_axes(names, mesh):
+        size *= mesh.shape[ax]
+    return size
+
+
+def _resolve_spec(shape, spec, mesh) -> Optional[P]:
+    """Per-dim logical entries -> PartitionSpec of physical axes.
+
+    Divisibility is enforced per dimension: the longest prefix of the
+    resolved axes whose size product divides the dim is kept.  Returns
+    None when nothing ends up sharded (caller no-ops).
+    """
+    used: set = set()
+    entries = []
+    for dim, entry in zip(shape, spec):
+        axes = resolve_axes(entry, mesh, used)
+        while axes:
+            prod = 1
+            for ax in axes:
+                prod *= mesh.shape[ax]
+            if dim % prod == 0:
+                break
+            axes = axes[:-1]
+        used.update(axes)
+        entries.append(normalize_entry(axes))
+    if all(e is None for e in entries):
+        return None
+    return P(*entries)
+
+
+def constrain(x: jnp.ndarray, *spec: Entry) -> jnp.ndarray:
+    """``with_sharding_constraint`` by logical axis names; ambient mesh.
+
+    Trailing dims not covered by ``spec`` are replicated.  Off-mesh (or
+    on a single-device mesh) this is the identity.
+    """
+    mesh = ambient_mesh()
+    if mesh is None or mesh.devices.size <= 1:
+        return x
+    p = _resolve_spec(x.shape, spec, mesh)
+    if p is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, p)
+
+
+def constrain_bsd(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, d) activations: batch over dp, sequence over the tp axis
+    (sequence parallelism), features replicated."""
+    return constrain(x, "dp", "seq", None)
+
+
+def constrain_bhsd(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, S, D) attention tensors: heads over tp when they divide,
+    else sequence (context parallelism)."""
+    mesh = ambient_mesh()
+    if mesh is None or mesh.devices.size <= 1:
+        return x
+    tp = logical_axis_size("heads", mesh)
+    if tp > 1 and x.shape[1] % tp == 0:
+        return constrain(x, "dp", "heads", None, None)
+    return constrain(x, "dp", None, "seq", None)
+
+
+def constrain_tokens(x: jnp.ndarray) -> jnp.ndarray:
+    """(T, d) flattened token tables (MoE dispatch): tokens over dp."""
+    return constrain(x, "dp", None)
+
+
+def constrain_spatial(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, C, *spatial) neural-operator activations.
+
+    Full-DP layout: FNO-family weights are tiny, so when the global
+    batch covers the whole mesh the batch dim is sharded over EVERY
+    axis and weights replicate — FFTs and contractions become
+    embarrassingly parallel and the only collective left is the
+    gradient all-reduce.  Fallback when the batch doesn't cover the
+    mesh: batch over dp, channels over tp.
+    """
+    mesh = ambient_mesh()
+    if mesh is None or mesh.devices.size <= 1:
+        return x
+    total = logical_axis_size("all", mesh)
+    if total > 1 and x.shape[0] % total == 0:
+        return constrain(x, ("dp", "tp"), *([None] * (x.ndim - 1)))
+    return constrain(x, "dp", "tp", *([None] * (x.ndim - 2)))

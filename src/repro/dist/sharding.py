@@ -1,0 +1,248 @@
+"""Rule-table spec derivation: pytrees of shapes -> pytrees of
+PartitionSpecs, with divisibility-checked fallback chains.
+
+Everything routes through :func:`pick_spec`: a candidate chain is tried
+in order and the first candidate whose every sharded dimension divides
+cleanly wins (axes absent from the mesh are adapted away, indivisible
+axes fail the candidate).  The derivations (`lm_param_specs`,
+`fno_param_specs`, `batch_specs`, `cache_specs`) encode the layout
+policy once, so launch, dry-run, and serving all derive identical
+shardings from the same tables.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .rules import Entry, normalize_entry, resolve_axes
+
+Candidate = Tuple[Entry, ...]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The physical data-parallel axes present in ``mesh``."""
+    return resolve_axes("dp", mesh)
+
+
+def _try_candidate(shape, mesh: Mesh, cand: Candidate) -> Optional[P]:
+    """Resolve one candidate; None when a sharded dim doesn't divide."""
+    if len(cand) > len(shape):
+        return None
+    used: set = set()
+    entries = []
+    for dim, entry in zip(shape, cand):
+        axes = resolve_axes(entry, mesh, used)
+        prod = 1
+        for ax in axes:
+            prod *= mesh.shape[ax]
+        if axes and dim % prod != 0:
+            return None  # indivisible -> candidate fails, chain continues
+        used.update(axes)
+        entries.append(normalize_entry(axes))
+    return P(*entries)
+
+
+def pick_spec(shape, mesh: Mesh, chain: Sequence[Candidate]) -> P:
+    """First candidate in ``chain`` that shards ``shape`` cleanly.
+
+    Candidate entries are per-dimension: None, an axis name (logical or
+    physical), or a tuple of names.  Names missing from the mesh are
+    dropped silently; a name present but indivisible fails the whole
+    candidate so the chain's fallback ordering is respected.  An empty
+    candidate ``()`` always succeeds (full replication), as does an
+    exhausted chain.
+    """
+    for cand in chain:
+        spec = _try_candidate(tuple(shape), mesh, cand)
+        if spec is not None:
+            return spec
+    return P()
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(
+        str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+        for k in path
+    )
+
+
+def _nbytes(leaf) -> int:
+    return int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Parameter rule tables
+# ---------------------------------------------------------------------------
+
+
+def _weight_chain(shape) -> Tuple[Candidate, ...]:
+    """Fallback chain for a (possibly layer-stripped) weight shape."""
+    r = len(shape)
+    if r < 2:
+        return ((),)
+    if r == 2:
+        # shard the larger dim over tp (column-parallel for (d, ff),
+        # row-parallel for (ff, d)); fall back to the other, then replicate
+        big = 0 if shape[0] > shape[1] else 1
+        first = [None, None]
+        first[big] = "tp"
+        second = [None, None]
+        second[1 - big] = "tp"
+        return (tuple(first), tuple(second), ())
+    if r == 3:
+        # (E, d, ff) expert stacks: expert parallelism over tp when E
+        # divides (deepseek 64/16), else shard the expert ff dim
+        # (granite-moe's indivisible E=40), else the middle dim
+        return (
+            ("expert", None, None),
+            (None, None, "tp"),
+            (None, "tp", None),
+            (),
+        )
+    # higher-rank (spectral-style) weights: try the channel dims
+    tail = (None,) * (r - 3)
+    return (
+        (None, None, "tp") + tail,
+        (None, "tp", None) + tail,
+        (),
+    )
+
+
+def lm_param_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree for an LM parameter tree.
+
+    Layer-stacked leaves (under "layers") never shard the leading L
+    axis — it is the ``lax.scan`` carrier.  2D weights shard their
+    larger dim over tp with divisibility fallback; vectors/norms
+    replicate; expert stacks prefer expert parallelism.
+    """
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        stacked = "layers" in _path_names(path)
+        inner_shape = shape[1:] if stacked else shape
+        inner = pick_spec(inner_shape, mesh, _weight_chain(inner_shape))
+        if stacked:
+            return P(None, *inner) if len(inner) else P()
+        return inner
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def fno_param_specs(params_shape: Any, mesh: Mesh,
+                    *, shard_threshold: int = 1 << 24) -> Any:
+    """PartitionSpec tree for FNO/SFNO parameter trees.
+
+    Default layout is full-DP: the weights are tiny relative to the
+    activations, so everything replicates and the batch shards over the
+    whole mesh (see ``constrain_spatial``).  Spectral leaves above
+    ``shard_threshold`` elements (high-resolution dense factorizations)
+    shard a channel dim over tp so the hr cells still fit.
+    """
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        names = _path_names(path)
+        if int(leaf.size) < shard_threshold or len(shape) < 3:
+            return P()
+        # stacked leaves carry (L, ...) — never shard the scan axis
+        stacked = bool(names) and names[0] in ("spectral", "skips")
+        inner_shape = shape[1:] if stacked else shape
+        inner = pick_spec(inner_shape, mesh, _weight_chain(inner_shape))
+        if stacked:
+            return P(None, *inner) if len(inner) else P()
+        return inner
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rule tables
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Leading-dim data parallelism for input batches, replicate fallback."""
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        r = len(leaf.shape)
+        return pick_spec(leaf.shape, mesh, [(dp,) + (None,) * (r - 1), ()])
+
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh, cfg: Any) -> Any:
+    """Decode-cache layout: slots over dp, heads over tp when they divide.
+
+    Layer-stacked leaves — leading dim equal to the config's layer
+    count — keep the scan axis replicated and shard the slot dim that
+    follows it; per-slot leaves (e.g. the ``step`` clocks) shard dim 0.
+    """
+    dp = dp_axes(mesh)
+    layer_counts = {
+        n for n in (getattr(cfg, "n_layers", None), getattr(cfg, "dec_layers", None))
+        if n
+    }
+    head_keys = ("k", "v", "ssd_state")
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        r = len(shape)
+        names = _path_names(path)
+        stacked = r >= 2 and shape[0] in layer_counts
+        if not stacked:
+            return pick_spec(shape, mesh, [(dp,) + (None,) * (r - 1), ()])
+        base = [None, dp] + [None] * (r - 2)
+        chain = []
+        if names and names[-1] in head_keys and r > 2:
+            with_heads = list(base)
+            with_heads[2] = "heads"
+            chain.append(tuple(with_heads))
+        chain += [tuple(base), ()]
+        return pick_spec(shape, mesh, chain)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# Materialisation + accounting
+# ---------------------------------------------------------------------------
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def replication_report(shape_tree: Any, spec_tree: Any) -> Dict[str, Any]:
+    """Byte accounting of a (shapes, specs) pair: how much parameter
+    memory is sharded vs fully replicated per device."""
+    stats = {"total_bytes": 0, "sharded_bytes": 0, "replicated_bytes": 0,
+             "n_leaves": 0, "n_sharded": 0}
+
+    def acc(leaf, spec):
+        nbytes = _nbytes(leaf)
+        sharded = any(e is not None for e in tuple(spec))
+        stats["total_bytes"] += nbytes
+        stats["n_leaves"] += 1
+        if sharded:
+            stats["sharded_bytes"] += nbytes
+            stats["n_sharded"] += 1
+        else:
+            stats["replicated_bytes"] += nbytes
+        return spec
+
+    jax.tree_util.tree_map(acc, shape_tree, spec_tree,
+                           is_leaf=lambda x: isinstance(x, P))
+    total = stats["total_bytes"]
+    stats["replicated_fraction"] = (
+        stats["replicated_bytes"] / total if total else 0.0
+    )
+    return stats

@@ -27,27 +27,16 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
-from repro.dist.sharding import (
-    batch_specs,
-    cache_specs,
-    lm_param_specs,
-    replication_report,
-    to_named,
-)
+from repro.dist import use_mesh
+from repro.dist.sharding import lm_param_specs, replication_report
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import CollectiveStats, analyze_counts, model_flops, parse_hlo
-from repro.launch.steps import build_step
-from repro.optim import AdamWState
+from repro.launch.steps import build_step, bundle_shardings
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "benchmarks", "results", "dryrun.json")
-
-
-def _opt_specs(opt_shape: AdamWState, param_specs):
-    return AdamWState(count=P(), mu=param_specs, nu=param_specs)
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -70,38 +59,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     bundle = build_step(cfg, shape, get_policy(policy_name))
     param_specs = lm_param_specs(bundle.params_shape, mesh)
-    p_named = to_named(mesh, param_specs)
+    in_sh, out_sh = bundle_shardings(bundle, cfg, mesh, param_specs)
 
-    with mesh:
-        if shape.kind == "train":
-            opt_shape = bundle.extra_state_shape["opt_state"]
-            opt_named = to_named(mesh, _opt_specs(opt_shape, param_specs))
-            b_named = to_named(mesh, batch_specs(bundle.inputs["batch"], mesh))
-            jitted = jax.jit(
-                bundle.step_fn,
-                in_shardings=(p_named, opt_named, b_named),
-                out_shardings=(p_named, opt_named, NamedSharding(mesh, P())),
-            )
-            lowered = jitted.lower(bundle.params_shape, opt_shape,
-                                   bundle.inputs["batch"])
-        elif shape.kind == "prefill":
-            b_named = to_named(mesh, batch_specs(bundle.inputs["batch"], mesh))
-            jitted = jax.jit(
-                bundle.step_fn, in_shardings=(p_named, b_named),
-            )
-            lowered = jitted.lower(bundle.params_shape, bundle.inputs["batch"])
-        else:  # decode
-            c_named = to_named(mesh, cache_specs(bundle.inputs["cache"], mesh, cfg))
-            t_named = to_named(mesh, batch_specs(bundle.inputs["tokens"], mesh))
-            jitted = jax.jit(
-                bundle.step_fn,
-                in_shardings=(p_named, c_named, t_named),
-                out_shardings=(None, c_named),
-            )
-            lowered = jitted.lower(bundle.params_shape, bundle.inputs["cache"],
-                                   bundle.inputs["tokens"])
+    if shape.kind == "train":
+        lower_args = (bundle.params_shape, bundle.extra_state_shape["opt_state"],
+                      bundle.inputs["batch"])
+    elif shape.kind == "prefill":
+        lower_args = (bundle.params_shape, bundle.inputs["batch"])
+    else:  # decode
+        lower_args = (bundle.params_shape, bundle.inputs["cache"],
+                      bundle.inputs["tokens"])
 
-        compiled = lowered.compile()
+    with use_mesh(mesh):
+        jitted = jax.jit(bundle.step_fn, in_shardings=in_sh, out_shardings=out_sh)
+        compiled = jitted.lower(*lower_args).compile()
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
@@ -142,8 +113,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "roofline": roof.to_dict(),
         "model_flops_6nd": mf,
         "useful_flops_ratio": (mf / global_flops) if global_flops else None,
-        "replication": replication_report(
-            bundle.params_shape, lm_param_specs(bundle.params_shape, mesh)),
+        "replication": replication_report(bundle.params_shape, param_specs),
     })
     if verbose:
         print(f"== {bundle.description} on {mesh_name} ==")

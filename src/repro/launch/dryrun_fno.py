@@ -23,8 +23,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.fno_paper import FNO_DARCY, SFNO_SWE, TFNO_NS
 from repro.core import get_policy
-from repro.dist.sharding import batch_specs, fno_param_specs, to_named
-from repro.launch.dryrun import RESULTS, save_result, _opt_specs
+from repro.dist import use_mesh
+from repro.dist.sharding import fno_param_specs, pick_spec, to_named
+from repro.launch.dryrun import RESULTS, save_result
+from repro.launch.steps import opt_specs as _opt_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze_counts, parse_hlo
 from repro.models import fno_apply, init_fno, init_sfno, sfno_apply
@@ -81,20 +83,17 @@ def run_fno_cell(name: str, multi_pod: bool, policy_name: str,
     p_named = to_named(mesh, param_specs)
     opt_named = to_named(mesh, _opt_specs(opt_shape, param_specs))
     # full-DP input layout: batch over every mesh axis when divisible
-    # (matches the in-model constraint — §Perf iteration 5)
-    from repro.dist.sharding import pick_spec
-    all_ax = tuple(mesh.axis_names)
-    dp = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+    # (matches constrain_spatial in the model — §Perf iteration 5)
     bspecs = jax.tree_util.tree_map(
         lambda v: pick_spec(v.shape, mesh, [
-            (all_ax,) + (None,) * (len(v.shape) - 1),
-            (dp,) + (None,) * (len(v.shape) - 1),
+            ("all",) + (None,) * (len(v.shape) - 1),
+            ("dp",) + (None,) * (len(v.shape) - 1),
             (),
         ]),
         batch,
     )
     b_named = to_named(mesh, bspecs)
-    with mesh:
+    with use_mesh(mesh):
         lowered = jax.jit(
             train_step,
             in_shardings=(p_named, opt_named, b_named),

@@ -170,7 +170,8 @@ def build_decode_step(cfg: LMArchConfig, shape: ShapeConfig,
         def serve_step(params, cache, tokens):
             return whisper_decode_step(params, cache, tokens, cfg, policy)
     else:
-        cache_shape = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, B, S, dtype=policy.compute_dtype))
 
         def serve_step(params, cache, tokens):
             return lm_decode_step(params, cache, tokens, cfg, policy)
@@ -191,3 +192,53 @@ def build_step(cfg: LMArchConfig, shape: ShapeConfig,
     if shape.kind == "prefill":
         return build_prefill_step(cfg, shape, policy)
     return build_decode_step(cfg, shape, policy)
+
+
+# ---------------------------------------------------------------------------
+# Sharding derivation — every consumer of a StepBundle (dry-run, launch,
+# serving) gets its NamedShardings from the repro.dist rule tables here.
+# ---------------------------------------------------------------------------
+
+
+def opt_specs(opt_shape: Any, param_specs: Any) -> Any:
+    """Optimizer-state specs mirror the parameter specs (AdamW moments
+    are param-shaped; the step count replicates)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.optim import AdamWState
+
+    del opt_shape  # structure is implied by AdamWState
+    return AdamWState(count=P(), mu=param_specs, nu=param_specs)
+
+
+def bundle_shardings(bundle: StepBundle, cfg: LMArchConfig, mesh,
+                     param_specs: Any = None) -> Tuple[Any, Any]:
+    """(in_shardings, out_shardings) for ``bundle.step_fn`` on ``mesh``,
+    derived entirely from the ``repro.dist`` rule tables.
+
+    ``param_specs`` lets a caller that already derived the parameter
+    specs (e.g. for a replication report) pass them in instead of
+    re-walking the tree.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.sharding import (
+        batch_specs,
+        cache_specs,
+        lm_param_specs,
+        to_named,
+    )
+
+    if param_specs is None:
+        param_specs = lm_param_specs(bundle.params_shape, mesh)
+    p_named = to_named(mesh, param_specs)
+    scalar = NamedSharding(mesh, P())
+    if "opt_state" in bundle.extra_state_shape:      # train step
+        o_named = to_named(
+            mesh, opt_specs(bundle.extra_state_shape["opt_state"], param_specs))
+        b_named = to_named(mesh, batch_specs(bundle.inputs["batch"], mesh))
+        return (p_named, o_named, b_named), (p_named, o_named, scalar)
+    if "cache" in bundle.inputs:                     # decode step
+        c_named = to_named(mesh, cache_specs(bundle.inputs["cache"], mesh, cfg))
+        t_named = to_named(mesh, batch_specs(bundle.inputs["tokens"], mesh))
+        return (p_named, c_named, t_named), (None, c_named)
+    b_named = to_named(mesh, batch_specs(bundle.inputs["batch"], mesh))
+    return (p_named, b_named), None                  # prefill

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import PrecisionPolicy, FULL
 from repro.core.spectral import init_spectral_weights, spectral_conv_apply
-from repro.dist.constrain import constrain
+from repro.dist.constrain import constrain_spatial
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,18 +119,13 @@ def fno_apply(
 
     def block(h, layer_params):
         # Full-DP layout: at FNO sizes (~2-50M params) the weights are tiny,
-        # so shard batch over EVERY mesh axis (pod x data x model) and
-        # replicate weights — FFTs and contractions become embarrassingly
-        # parallel and the only collective left is the gradient all-reduce
-        # (§Perf iteration 5: collective term 2.02s -> ~0.04s on tfno-ns).
-        # Fallback when batch doesn't cover the mesh: channels over model.
-        from repro.dist.constrain import ambient_mesh
-        mesh = ambient_mesh()
-        total = mesh.devices.size if mesh is not None else 1
-        if mesh is not None and h.shape[0] % total == 0:
-            h = constrain(h, ("dp", "model"), *([None] * (h.ndim - 1)))
-        else:
-            h = constrain(h, "dp", "model", *([None] * (h.ndim - 2)))
+        # so shard batch over EVERY mesh axis and replicate weights — FFTs
+        # and contractions become embarrassingly parallel and the only
+        # collective left is the gradient all-reduce (§Perf iteration 5:
+        # collective term 2.02s -> ~0.04s on tfno-ns).  The layout decision
+        # (incl. the channels-over-tp fallback when the batch doesn't cover
+        # the mesh) lives in repro.dist, not here.
+        h = constrain_spatial(h)
         spect, skip = layer_params
         y = spectral_conv_apply(
             spect, h, cfg.modes, policy, use_pallas=cfg.use_pallas

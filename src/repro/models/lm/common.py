@@ -86,13 +86,12 @@ def blocked_attention(
     Memory per kv step: (B,H,nq,Tq,Tk)/shards scores — O(S·Tk) not O(S²).
     Blocks entirely outside the causal/window band still execute (masked).
     """
-    from repro.dist.constrain import ambient_mesh, constrain
+    from repro.dist.constrain import constrain, logical_axis_size
 
     B, H, S, D = q.shape
     Dv = v.shape[-1]   # MLA: v head dim != q/k head dim
     Sk = k.shape[2]
-    mesh = ambient_mesh()
-    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    msize = logical_axis_size("heads")
     if q_chunk <= 0:
         q_chunk = max(64, min(512, S // max(msize, 1)))
     pad_q = (-S) % q_chunk
@@ -110,9 +109,9 @@ def blocked_attention(
     qb = q.reshape(B, H, nq, q_chunk, D)
     shard_heads = (H % max(msize, 1)) == 0
     if shard_heads:
-        qb = constrain(qb, "dp", "model", None, None, None)
+        qb = constrain(qb, "dp", "heads", None, None, None)
     else:
-        qb = constrain(qb, "dp", None, "model", None, None)
+        qb = constrain(qb, "dp", None, "seq", None, None)
     kb = k.reshape(B, H, nk, k_chunk, D).transpose(2, 0, 1, 3, 4)
     vb = v.reshape(B, H, nk, k_chunk, Dv).transpose(2, 0, 1, 3, 4)
     qpb = q_pos.reshape(nq, q_chunk)

@@ -233,7 +233,7 @@ def lm_forward(
     unembed = params.get("unembed", params["embed"])
     logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
                         unembed.astype(jnp.float32))
-    logits = constrain(logits, "dp", "model", None)  # S-sharded CE
+    logits = constrain(logits, "dp", "seq", None)  # S-sharded CE
     return logits, aux
 
 
@@ -242,9 +242,14 @@ def lm_forward(
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg: LMArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict:
+def init_cache(cfg: LMArchConfig, batch: int, max_len: int, dtype=jnp.float32) -> Dict:
     """Decode cache pytree (zeros; per-slot ``step`` clocks support
     continuous batching — every request tracks its own position).
+
+    ``dtype`` is the KV storage dtype and should follow the serving
+    policy's compute dtype (f32 default keeps the decode-vs-forward
+    contract exact under the FULL policy; AMP policies pass bf16/fp16
+    for the memory saving).
 
     Attention caches are ring buffers of length min(max_len, window) when
     the arch is sliding-window (hymba), else full length.  SSD state is the

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from .common import init_swiglu, swiglu
-from repro.dist.constrain import ambient_mesh, constrain, constrain_tokens
+from repro.dist.constrain import constrain, constrain_tokens, logical_axis_size
 
 
 def init_moe(key, d_model, n_experts, moe_ff, n_shared, shared_ff):
@@ -59,14 +59,9 @@ def moe_apply(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (out (T, d), aux_loss scalar)."""
     T, d = x.shape
-    mesh = ambient_mesh()
-    G = 1
-    if mesh is not None:
-        for n in ("pod", "data"):
-            if n in mesh.axis_names:
-                G *= mesh.shape[n]
-        if T % G:
-            G = 1
+    G = logical_axis_size("dp")   # data-parallel degree = dispatch groups
+    if T % G:
+        G = 1
     if G > 1:
         xg = constrain(x.reshape(G, T // G, d), "dp", None, None)
         outs, auxes = jax.vmap(
@@ -129,7 +124,7 @@ def _moe_one_group(
     x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
     expert_in = x_pad[table].astype(dtype)                      # (E, C, d)
     if use_constraints:
-        expert_in = constrain(expert_in, "model", None, None)   # EP when E divides
+        expert_in = constrain(expert_in, "expert", None, None)  # EP when E divides
 
     def _mm(expr, a, b):
         # CPU thunk runtime can't execute batched bf16xbf16=f32 dots;

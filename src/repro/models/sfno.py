@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import PrecisionPolicy, FULL, ComplexPair
-from repro.dist.constrain import constrain
+from repro.dist.constrain import constrain_spatial
 from repro.core.contraction import contract
 from repro.core.precision import quantize_complex
 from repro.core.stabilizer import get_stabilizer
@@ -95,7 +95,7 @@ def sfno_apply(
     h = jnp.moveaxis(h, -1, 1)
 
     def block(h, layer):
-        h = constrain(h, "dp", "model", None, None)
+        h = constrain_spatial(h)
         w, skip = layer
         y = _spherical_conv(h, w, cfg, policy).astype(cdt)
         s = jnp.moveaxis(_linear(skip, jnp.moveaxis(h, 1, -1), cdt), -1, 1)

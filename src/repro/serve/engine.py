@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import PrecisionPolicy, FULL
 from repro.configs.base import LMArchConfig
+from repro.dist import use_mesh
 from repro.models.lm import init_cache, lm_decode_step
 
 
@@ -45,6 +46,7 @@ class ServeEngine:
         max_len: int = 512,
         policy: PrecisionPolicy = FULL,
         greedy: bool = True,
+        mesh=None,
     ):
         self.params = params
         self.cfg = cfg
@@ -52,12 +54,40 @@ class ServeEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.greedy = greedy
-        self.cache = init_cache(cfg, n_slots, max_len)
+        self.mesh = mesh
+        self.cache = init_cache(cfg, n_slots, max_len,
+                                dtype=policy.compute_dtype)
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.slot_pending: List[List[int]] = [[] for _ in range(n_slots)]
-        self._step = jax.jit(
-            lambda p, c, t: lm_decode_step(p, c, t, cfg, policy)
-        )
+        step_fn = lambda p, c, t: lm_decode_step(p, c, t, cfg, policy)
+        if mesh is None:
+            self._step = jax.jit(step_fn)
+        else:
+            # shard the serving state through the same rule tables the
+            # dry-run lowers with: params by lm_param_specs, the slot
+            # cache by cache_specs, per-slot tokens data-parallel.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.dist.sharding import (
+                batch_specs,
+                cache_specs,
+                lm_param_specs,
+                to_named,
+            )
+
+            p_named = to_named(
+                mesh, lm_param_specs(jax.eval_shape(lambda: params), mesh))
+            c_named = to_named(
+                mesh, cache_specs(jax.eval_shape(lambda: self.cache), mesh, cfg))
+            t_named = to_named(
+                mesh,
+                batch_specs(jax.ShapeDtypeStruct((n_slots,), jnp.int32), mesh))
+            self.params = jax.device_put(params, p_named)
+            self.cache = jax.device_put(self.cache, c_named)
+            self._step = jax.jit(
+                step_fn,
+                in_shardings=(p_named, c_named, t_named),
+                out_shardings=(NamedSharding(mesh, P()), c_named),
+            )
 
     # -- admission -----------------------------------------------------------
     def _reset_slot(self, i: int):
@@ -94,7 +124,9 @@ class ServeEngine:
                 tokens[i] = req.generated[-1]
             else:
                 tokens[i] = req.prompt[-1] if req.prompt else 0
-        logits, self.cache = self._step(self.params, self.cache, jnp.asarray(tokens))
+        with use_mesh(self.mesh):
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(tokens))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i, req in enumerate(self.slots):
             if req is None:
