@@ -6,7 +6,6 @@ contract) where ``derived`` carries the table's headline quantity
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -15,10 +14,8 @@ import numpy as np
 from repro.core import (
     FULL,
     ComplexPair,
-    PrecisionSchedule,
     contract,
     get_policy,
-    global_path_cache,
     greedy_path,
     path_intermediate_bytes,
     quantize_complex,
@@ -26,16 +23,10 @@ from repro.core import (
 )
 from repro.core.contraction import PathCache
 from repro.models import UNetConfig, fno_apply, init_unet, unet_apply
+from repro.precision import SiteRule
 from repro.train.losses import relative_l2
 
-from .common import (
-    compiled_temp_bytes,
-    darcy_data,
-    eval_fno,
-    small_fno,
-    time_fn,
-    train_fno,
-)
+from .common import darcy_data, eval_fno, small_fno, time_fn, train_fno
 
 ROWS = []
 
@@ -201,7 +192,10 @@ def bench_stabilizers_table3():
     a = jnp.asarray(rng.randn(4, 1, 64, 64) * 40.0 + 30.0, jnp.float32)
 
     for stab in (None, "tanh", "hard_clip", "sigma_clip"):
-        policy = dataclasses.replace(get_policy("half_fno_only"), stabilizer=stab)
+        policy = get_policy("half_fno_only").with_rules(
+            ("*/spectral/*", SiteRule(stabilize=stab)),
+            name=f"half_fno_{stab or 'none'}",
+        )
         y = fno_apply(params, a, cfg, policy)
         finite = bool(np.isfinite(np.asarray(y, np.float32)).all())
         row(f"table3_stabilizer_{stab or 'none'}", 0.0, f"finite={finite}")

@@ -2,13 +2,11 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FULL, get_policy
 from repro.models import FNOConfig, fno_apply, init_fno
 from repro.train.losses import relative_l2
 

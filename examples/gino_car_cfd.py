@@ -8,7 +8,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import FULL, get_policy
 from repro.data import sample_car_batch

@@ -7,7 +7,6 @@ trained under the mixed-precision policy with tanh stabilisation.
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import FULL, get_policy
 from repro.data import sample_swe_batch

@@ -11,13 +11,13 @@ import argparse
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FULL, PrecisionSchedule
+from repro.core import FULL, PrecisionSchedule, get_policy
 from repro.data import sample_darcy_batch
 from repro.models import FNOConfig, fno_apply, init_fno
 from repro.optim import AdamW
+from repro.precision import FULL_PRECISION, precision_rules
 from repro.train import Trainer, TrainerConfig, relative_l2
 
 
@@ -71,6 +71,18 @@ def main():
         e_super = float(relative_l2(fno_apply(p_final, a_hi, cfg, FULL), u_hi))
         print(f"test rel-L2 @ {args.n}x{args.n}:      {e_test:.4f}")
         print(f"zero-shot super-res @ {2*args.n}x{2*args.n}: {e_super:.4f}")
+
+        # Per-site override: evaluate the paper's mixed pipeline with the
+        # LAST FNO layer pinned to full precision — a per-layer precision
+        # experiment the flat policy API could not express.  The scoped
+        # rule takes precedence over the policy's own "*/spectral/*" rule.
+        mixed = get_policy(f"mixed_fno_{args.half}")
+        e_mixed = float(relative_l2(fno_apply(p_final, a_te, cfg, mixed), u_te))
+        with precision_rules((f"fno/layer{cfg.n_layers - 1}/*", FULL_PRECISION)):
+            e_lastfull = float(
+                relative_l2(fno_apply(p_final, a_te, cfg, mixed), u_te))
+        print(f"mixed eval rel-L2:                 {e_mixed:.4f}")
+        print(f"mixed, last layer full (override): {e_lastfull:.4f}")
 
 
 if __name__ == "__main__":

@@ -1,30 +1,40 @@
 """Core contribution: mixed-precision spectral compute with guarantees.
 
 Public API:
-  PrecisionPolicy / get_policy / POLICIES  — explicit AMP replacement
+  PrecisionPolicy / get_policy / POLICIES  — site-addressed rule sets
+                                             (re-exported from
+                                             ``repro.precision``)
   ComplexPair                              — split-real half complex
   contract / greedy_path / PathCache       — memory-greedy contraction
   spectral_conv_apply / init_spectral_weights — mixed-precision FNO block
-  PrecisionSchedule                        — mixed→AMP→full scheduling
+  PrecisionSchedule                        — stack of precision-rule
+                                             overlays over training
   theory                                   — Thm 3.1/3.2 estimators+bounds
 """
 from .precision import (  # noqa: F401
     ComplexPair,
-    PrecisionPolicy,
     PrecisionSystem,
     FORMAT_EPS,
     FORMAT_MAX,
-    FULL,
-    AMP_FP16,
-    AMP_BF16,
-    MIXED_FNO_FP16,
-    MIXED_FNO_BF16,
-    HALF_FNO_ONLY,
-    POLICIES,
-    get_policy,
     precision_system_for,
     quantize_complex,
     simulate_fp8,
+)
+from repro.precision import (  # noqa: F401
+    AMP_BF16,
+    AMP_FP16,
+    FULL,
+    HALF_FNO_ONLY,
+    MIXED_FNO_BF16,
+    MIXED_FNO_FP16,
+    POLICIES,
+    SIM_FP8_E4M3,
+    SIM_FP8_E5M2,
+    PrecisionPolicy,
+    SitePrecision,
+    SiteRule,
+    get_policy,
+    precision_rules,
 )
 from .contraction import (  # noqa: F401
     PathCache,

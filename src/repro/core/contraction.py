@@ -22,16 +22,16 @@ This module provides:
 """
 from __future__ import annotations
 
-import math
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 
-from .precision import ComplexPair, PrecisionPolicy, FULL
+from .precision import ComplexPair
+from repro.precision import FULL
 
 Path = Tuple[Tuple[int, int], ...]
+Parsed = Tuple[List[str], str, Dict[str, int]]
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +96,7 @@ def greedy_path(
     expr: str,
     shapes: Sequence[Tuple[int, ...]],
     objective: str = "memory",
+    parsed: Optional[Parsed] = None,
 ) -> Path:
     """Pairwise contraction order.
 
@@ -103,8 +104,11 @@ def greedy_path(
     the intermediate tensor (the paper's choice).  ``"flops"``: minimise the
     pairwise FLOP count (opt-einsum-default-like), used as the ablation
     baseline for Table 10.
+
+    ``parsed`` lets a caller that already ran ``_parse`` (e.g. ``contract``)
+    hand the result through instead of re-parsing the expression.
     """
-    terms, final, dims = _parse(expr, shapes)
+    terms, final, dims = parsed if parsed is not None else _parse(expr, shapes)
     terms = list(terms)
     ids = list(range(len(terms)))  # position -> original operand id chains
     path: List[Tuple[int, int]] = []
@@ -137,14 +141,20 @@ class PathCache:
         self.hits = 0
         self.misses = 0
 
-    def get(self, expr: str, shapes: Sequence[Tuple[int, ...]], objective: str) -> Path:
+    def get(
+        self,
+        expr: str,
+        shapes: Sequence[Tuple[int, ...]],
+        objective: str,
+        parsed: Optional[Parsed] = None,
+    ) -> Path:
         key = (expr, tuple(map(tuple, shapes)), objective)
         with self._lock:
             p = self._cache.get(key)
             if p is not None:
                 self.hits += 1
                 return p
-        p = greedy_path(expr, shapes, objective)
+        p = greedy_path(expr, shapes, objective, parsed=parsed)
         with self._lock:
             self._cache[key] = p
             self.misses += 1
@@ -181,7 +191,7 @@ def _pairwise(
     expr: str,
     a,
     b,
-    policy: PrecisionPolicy,
+    policy,
 ):
     """One two-operand contraction, dispatching on operand kinds.
 
@@ -216,16 +226,22 @@ def _pairwise(
 def contract(
     expr: str,
     *operands,
-    policy: PrecisionPolicy = FULL,
+    policy=FULL,
     objective: str = "memory",
     cache: Optional[PathCache] = None,
 ):
     """Execute a multi-operand einsum along the memory-greedy path.
 
+    ``policy`` may be a ``PrecisionPolicy`` (resolved at its spectral
+    contraction site) or a ``SitePrecision`` already resolved by the caller
+    (``policy.at("fno/layer2/spectral/contract")``) — anything exposing
+    ``spectral_dtype`` / ``spectral_is_half`` / ``accum_dtype``.
+
     Operands may be real jnp arrays, complex arrays, or ComplexPair.  With a
-    half-precision policy, complex operands are converted to split-real
-    ComplexPairs first (the paper's "both weights and inputs in half" — see
-    Table 11: weights-only-half forfeits nearly all the memory win).
+    half-precision rule in force, complex operands are converted to
+    split-real ComplexPairs first (the paper's "both weights and inputs in
+    half" — see Table 11: weights-only-half forfeits nearly all the memory
+    win).
     """
     cache = cache or _GLOBAL_PATH_CACHE
     ops = list(operands)
@@ -247,8 +263,9 @@ def contract(
         ]
 
     shapes = [o.shape for o in ops]
-    terms, final, dims = _parse(expr, shapes)
-    path = cache.get(expr, shapes, objective)
+    parsed = _parse(expr, shapes)
+    terms, final, dims = parsed
+    path = cache.get(expr, shapes, objective, parsed=parsed)
 
     terms = list(terms)
     vals = list(ops)

@@ -1,26 +1,28 @@
-"""Precision policies for mixed-precision neural operators.
+"""Numeric-format primitives for mixed-precision neural operators.
 
-Implements the paper's precision model:
+Implements the paper's format-level machinery:
 
 * An ``(a0, eps, T)``-precision system ``q`` (Section 3) — a simplified
   floating-point quantiser used by the theory module and by the simulated
   fp8 path (Appendix B.11).
-* ``PrecisionPolicy`` — the explicit, jit-friendly replacement for torch
-  AMP autocast.  Every module takes a policy and casts at its boundaries;
-  there is no global mutable autocast state (JAX-idiomatic).
 * ``ComplexPair`` — split-real representation of complex tensors so that
   half-precision *real* matmul hardware (MXU / tensor cores) can execute
   complex contractions.  This is the JAX analogue of the paper's
   ``view_as_real`` trick.
+* ``quantize_complex`` / ``simulate_fp8`` — boundary rounding onto a half
+  or fp8 grid (the representation error bounded by Theorem 3.2).
 
-The paper uses fp16 + loss scaling on GPU; on TPU the native half format
-is bf16.  Both are first-class here (``MIXED_FNO_FP16`` reproduces the
-paper; ``MIXED_FNO_BF16`` is the TPU-native adaptation).
+*Which* format applies *where* is no longer decided here: precision
+policies live in :mod:`repro.precision` as site-addressed rule sets
+(``policy.at("fno/layer2/spectral/contract")``), and this module only
+provides the grids those rules quantise onto.  ``repro.core`` re-exports
+the policy registry for backward compatibility.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import math
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -90,8 +92,6 @@ def precision_system_for(fmt: str) -> PrecisionSystem:
         "fp8_e4m3": 2.0 ** -6,
         "fp8_e5m2": 2.0 ** -14,
     }.get(fmt, 1e-30)
-    import math
-
     T = int(math.log(vmax / a0) / math.log1p(eps))
     return PrecisionSystem(a0=a0, eps=eps, T=T)
 
@@ -193,100 +193,3 @@ def quantize_complex(c: jnp.ndarray, dtype: Any) -> jnp.ndarray:
         return c
     pair = ComplexPair.from_complex(c, dtype)
     return pair.to_complex()
-
-
-# ---------------------------------------------------------------------------
-# PrecisionPolicy — the explicit AMP replacement
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class PrecisionPolicy:
-    """Where each class of op computes/stores, threaded explicitly.
-
-    Attributes:
-      name:            registry key.
-      param_dtype:     master weight storage (always f32 for training).
-      compute_dtype:   real-valued dense ops (the AMP-autocast set).
-      spectral_dtype:  FNO-block complex pipeline storage (the paper's
-                       contribution: fp16/bf16 here).  ``None`` => full f32
-                       complex (the "AMP leaves the FNO block in full
-                       precision" failure mode the paper identifies).
-      accum_dtype:     contraction accumulation (always f32: MXU-native).
-      stabilizer:      pre-FFT stabiliser name ('tanh' | 'hard_clip' |
-                       'sigma_clip' | None).  Paper: tanh whenever the
-                       forward FFT is half precision.
-      requires_loss_scaling: fp16 needs dynamic loss scaling; bf16 does not.
-    """
-
-    name: str
-    param_dtype: Any = jnp.float32
-    compute_dtype: Any = jnp.float32
-    spectral_dtype: Optional[Any] = None
-    accum_dtype: Any = jnp.float32
-    stabilizer: Optional[str] = None
-    requires_loss_scaling: bool = False
-
-    # -- casting helpers -----------------------------------------------------
-    def cast_compute(self, tree):
-        """Cast a pytree of real arrays to the compute dtype."""
-        def _c(x):
-            if isinstance(x, jnp.ndarray) and jnp.issubdtype(x.dtype, jnp.floating):
-                return x.astype(self.compute_dtype)
-            return x
-        return jax.tree_util.tree_map(_c, tree)
-
-    def cast_spectral(self, c: jnp.ndarray):
-        """Enter the spectral pipeline: complex64 -> ComplexPair at the
-        spectral storage dtype (or stay complex64 for the full path)."""
-        if self.spectral_dtype is None:
-            return c
-        return ComplexPair.from_complex(c, self.spectral_dtype)
-
-    @property
-    def spectral_is_half(self) -> bool:
-        return self.spectral_dtype is not None
-
-    @property
-    def eps(self) -> float:
-        """Relative precision of the spectral dtype (for theory checks)."""
-        key = jnp.dtype(self.spectral_dtype).name if self.spectral_dtype is not None else "float32"
-        return FORMAT_EPS[key]
-
-
-# The paper's three headline settings + TPU-native variants + fp8 sim.
-FULL = PrecisionPolicy(name="full")
-AMP_FP16 = PrecisionPolicy(
-    name="amp_fp16", compute_dtype=jnp.float16, requires_loss_scaling=True
-)
-AMP_BF16 = PrecisionPolicy(name="amp_bf16", compute_dtype=jnp.bfloat16)
-MIXED_FNO_FP16 = PrecisionPolicy(
-    name="mixed_fno_fp16",
-    compute_dtype=jnp.float16,
-    spectral_dtype=jnp.float16,
-    stabilizer="tanh",
-    requires_loss_scaling=True,
-)
-MIXED_FNO_BF16 = PrecisionPolicy(
-    name="mixed_fno_bf16",
-    compute_dtype=jnp.bfloat16,
-    spectral_dtype=jnp.bfloat16,
-    stabilizer="tanh",
-)
-# FNO block half, rest full — the "Half-Prec FNO only" bar in Fig. 3.
-HALF_FNO_ONLY = PrecisionPolicy(
-    name="half_fno_only", spectral_dtype=jnp.float16, stabilizer="tanh",
-    requires_loss_scaling=True,
-)
-
-POLICIES = {
-    p.name: p
-    for p in [FULL, AMP_FP16, AMP_BF16, MIXED_FNO_FP16, MIXED_FNO_BF16, HALF_FNO_ONLY]
-}
-
-
-def get_policy(name: str) -> PrecisionPolicy:
-    try:
-        return POLICIES[name]
-    except KeyError:
-        raise KeyError(f"unknown precision policy {name!r}; have {sorted(POLICIES)}")

@@ -6,48 +6,74 @@ gradients are large and tolerate coarse arithmetic; late-training updates
 are small and benefit from full precision.  The scheduled run *beats* the
 full-precision baseline on zero-shot super-resolution (Table 1).
 
+A schedule is now a piecewise-constant **stack of rule overlays** over a
+base policy, not a sequence of whole-policy swaps: each phase is either a
+registry rule-set name (``"mixed_fno_fp16"`` — itself an overlay over the
+shared site table) or a raw tuple of ``(site_pattern, SiteRule)`` entries
+layered onto ``base``.  That makes partial-precision phases expressible —
+e.g. a phase that half-quantises only the spectral contraction while the
+FFT boundary stays full — which the old whole-policy schedule could not
+say.
+
 Because a precision change alters compiled dtypes, each phase owns its own
 jitted train step; the trainer swaps steps at phase boundaries (cheap: at
-most ``len(phases)-1`` recompiles per run).
+most ``len(phases)-1`` recompiles per run).  Phase policies carry stable,
+distinct names so the trainer's step cache keys correctly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Tuple, Union
 
-from .precision import PrecisionPolicy, get_policy
+from repro.precision import PrecisionPolicy, get_policy
+from repro.precision.rules import normalize_entries
+
+#: A phase overlay: a registry policy name, or rule entries over ``base``.
+Overlay = Union[str, tuple]
 
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionSchedule:
-    """Piecewise-constant policy over normalised training progress.
+    """Piecewise-constant precision-rule overlays over normalised progress.
 
-    ``phases`` is a tuple of (end_fraction, policy_name), end-exclusive and
+    ``phases`` is a tuple of (end_fraction, overlay), end-exclusive and
     strictly increasing, final end_fraction == 1.0.
     """
 
-    phases: Tuple[Tuple[float, str], ...]
+    phases: Tuple[Tuple[float, Overlay], ...]
+    base: str = "full"
 
     def __post_init__(self):
         ends = [e for e, _ in self.phases]
         if sorted(ends) != ends or ends[-1] != 1.0:
             raise ValueError(f"phase ends must increase to 1.0, got {ends}")
+        for _, overlay in self.phases:
+            if not isinstance(overlay, str):
+                normalize_entries(overlay)  # raise early on malformed entries
+
+    def _phase_policy(self, idx: int) -> PrecisionPolicy:
+        end, overlay = self.phases[idx]
+        if isinstance(overlay, str):
+            return get_policy(overlay)
+        return get_policy(self.base).with_rules(
+            *overlay, name=f"{self.base}+overlay{idx}"
+        )
 
     def policy_at(self, step: int, total_steps: int) -> PrecisionPolicy:
         frac = (step + 0.5) / max(total_steps, 1)
-        for end, name in self.phases:
+        for idx, (end, _) in enumerate(self.phases):
             if frac < end:
-                return get_policy(name)
-        return get_policy(self.phases[-1][1])
+                return self._phase_policy(idx)
+        return self._phase_policy(len(self.phases) - 1)
 
     def phase_boundaries(self, total_steps: int):
         """[(start_step, end_step, policy), ...] for trainer step swapping."""
         out = []
         prev = 0.0
-        for end, name in self.phases:
+        for idx, (end, _) in enumerate(self.phases):
             s, e = int(prev * total_steps), int(end * total_steps)
             if e > s:
-                out.append((s, e, get_policy(name)))
+                out.append((s, e, self._phase_policy(idx)))
             prev = end
         return out
 

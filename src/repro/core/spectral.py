@@ -18,14 +18,13 @@ the Pallas kernel (``repro.kernels``).
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .contraction import contract
-from .precision import ComplexPair, PrecisionPolicy, FULL, quantize_complex
-from .stabilizer import get_stabilizer
+from .precision import ComplexPair
+from repro.precision import FULL, PrecisionPolicy
 
 
 # ---------------------------------------------------------------------------
@@ -202,28 +201,35 @@ def spectral_conv_apply(
     modes: Sequence[int],
     policy: PrecisionPolicy = FULL,
     use_pallas: bool = False,
+    site: str = "model/spectral",
 ) -> jnp.ndarray:
     """Apply the Fourier convolution to ``x`` of shape (batch, ch, *spatial).
 
     Pipeline (Fig. 2): [stabiliser] -> FFT -> quantise -> truncate ->
     contract (memory-greedy, split-real half) -> scatter -> dequantise ->
-    iFFT.  With ``policy.spectral_dtype is None`` this is the exact
-    full-precision FNO reference.
+    iFFT.  Each stage resolves its precision through the rule table at
+    ``{site}/fft_in``, ``{site}/contract`` and ``{site}/fft_out`` — callers
+    pass a per-layer prefix (``"fno/layer2/spectral"``) so layers can be
+    addressed individually.  Under the ``full`` rule set every site
+    resolves to f32/complex64 and this is the exact full-precision FNO
+    reference.
     """
     ndim = len(modes)
     spatial = x.shape[2:]
     assert len(spatial) == ndim, (x.shape, modes)
     in_dtype = x.dtype
 
-    # 1. stabiliser before the forward FFT (only matters for half spectral)
-    if policy.spectral_is_half and policy.stabilizer:
-        x = get_stabilizer(policy.stabilizer)(x)
+    fft_in = policy.at(f"{site}/fft_in")
+    ctr = policy.at(f"{site}/contract")
+    fft_out = policy.at(f"{site}/fft_out")
+
+    # 1. stabiliser before the forward FFT (only active for half spectral)
+    x = fft_in.stabilize(x)
 
     # 2. forward FFT in f32 (TPU has no half FFT); boundary quantisation
-    #    models the half representation per Thm 3.2.
+    #    models the half (or simulated fp8) representation per Thm 3.2.
     xf = jnp.fft.rfftn(x.astype(jnp.float32), axes=tuple(range(2, 2 + ndim)))
-    if policy.spectral_is_half:
-        xf = quantize_complex(xf, policy.spectral_dtype)
+    xf = fft_in.quantize(xf)
 
     spectrum_shape = xf.shape[2:]
     corners = _corner_slices(modes, spectrum_shape)
@@ -237,18 +243,18 @@ def spectral_conv_apply(
         if use_pallas and _kind(params) == "dense":
             from repro.kernels import ops as kops
 
-            yc = kops.spectral_contract(xc, ops[0], policy=policy)
+            yc = kops.spectral_contract(xc, ops[0], policy=ctr)
         else:
-            yc = contract(expr, xc, *ops, policy=policy)
+            yc = ctr.contract(expr, xc, *ops)
         if isinstance(yc, ComplexPair):
             yc = yc.to_complex()
         out_f = out_f.at[(slice(None), slice(None), *sl)].set(yc.astype(jnp.complex64))
 
     # 3. inverse FFT back to physical space
     y = jnp.fft.irfftn(out_f, s=spatial, axes=tuple(range(2, 2 + ndim)))
-    if policy.spectral_is_half:
+    if fft_out.spectral_is_half:
         # iFFT output also lives at half precision in the paper's pipeline
-        y = y.astype(policy.spectral_dtype)
+        y = y.astype(fft_out.compute_dtype)
     return y.astype(in_dtype)
 
 

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .precision import PrecisionSystem, precision_system_for
+from .precision import PrecisionSystem
 
 
 # ---------------------------------------------------------------------------

@@ -12,9 +12,8 @@ host-RAM numpy store filled once by the PDE solvers in ``repro.data``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterator, Optional
+from typing import Callable, Dict, Iterator
 
-import jax
 import numpy as np
 
 

@@ -12,7 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import ComplexPair, PrecisionPolicy, FULL
+from repro.core.precision import ComplexPair
+from repro.precision import FULL, PrecisionPolicy
 from .spectral_contract import spectral_contract_pallas, vmem_bytes
 from .flash_attention import flash_attention as _flash
 from .rmsnorm import rmsnorm as _rmsnorm
@@ -23,14 +24,22 @@ def _use_interpret() -> bool:
 
 
 def spectral_contract(
-    x, w, *, policy: PrecisionPolicy = FULL, block_m: int = 64
+    x, w, *, policy=FULL, block_m: int = 64,
+    site: str = "model/spectral/contract",
 ):
     """Dense spectral contraction ``bi<modes>,io<modes>->bo<modes>``.
 
     ``x``: complex64 or ComplexPair, shape (B, I, *modes);
     ``w``: complex64 (the layer's dense corner weight), shape (I, O, *modes).
-    Returns the same kind as ``x`` (ComplexPair under a half policy).
+    ``policy``: an already-resolved ``SitePrecision`` handed down by the
+    model (``policy.at("fno/layer2/spectral/contract")``), or a bare
+    ``PrecisionPolicy`` — then resolved here at ``site``, which direct
+    callers must set to the layer's real address for per-layer
+    ``precision_rules`` overrides to reach this path.
+    Returns the same kind as ``x`` (ComplexPair under a half rule).
     """
+    if isinstance(policy, PrecisionPolicy):
+        policy = policy.at(site)
     half = policy.spectral_dtype or jnp.float32
     was_pair = isinstance(x, ComplexPair)
     if not was_pair:

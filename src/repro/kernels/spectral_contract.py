@@ -26,7 +26,6 @@ Validated against ``ref.spectral_contract_ref`` in interpret mode on CPU
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

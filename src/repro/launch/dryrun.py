@@ -26,13 +26,12 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
 from repro.dist import use_mesh
 from repro.dist.sharding import lm_param_specs, replication_report
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import CollectiveStats, analyze_counts, model_flops, parse_hlo
+from repro.launch.roofline import analyze_counts, model_flops, parse_hlo
 from repro.launch.steps import build_step, bundle_shardings
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -42,12 +41,16 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              policy_name: str = "amp_bf16", verbose: bool = True) -> dict:
     from repro.core import get_policy
+    from repro.precision import describe
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-           "kind": shape.kind, "policy": policy_name}
+           "kind": shape.kind, "policy": policy_name,
+           # resolved site table: the record says exactly which sites this
+           # cell lowered at which formats, not just a policy name
+           "policy_sites": describe(get_policy(policy_name))}
 
     ok, reason = cell_is_runnable(cfg, shape)
     if not ok:

@@ -23,9 +23,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.fno_paper import FNO_DARCY, SFNO_SWE, TFNO_NS
 from repro.core import get_policy
+from repro.precision import describe
 from repro.dist import use_mesh
 from repro.dist.sharding import fno_param_specs, pick_spec, to_named
-from repro.launch.dryrun import RESULTS, save_result
+from repro.launch.dryrun import save_result
 from repro.launch.steps import opt_specs as _opt_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze_counts, parse_hlo
@@ -48,7 +49,8 @@ def run_fno_cell(name: str, multi_pod: bool, policy_name: str,
     policy = get_policy(policy_name)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {"arch": name, "shape": f"train_{spec['res'][0]}x{spec['res'][1]}_b{spec['batch']}",
-           "mesh": mesh_name, "kind": "train", "policy": policy_name}
+           "mesh": mesh_name, "kind": "train", "policy": policy_name,
+           "policy_sites": describe(policy)}
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     B = spec["batch"]

@@ -26,9 +26,6 @@ Hardware model (TPU v5e-class, from the assignment):
 """
 from __future__ import annotations
 
-import dataclasses
-import re
-from typing import Dict, List, Optional, Tuple
 
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip

@@ -9,14 +9,13 @@ params + moments + activation working set.  ``prefill`` lowers the forward;
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LMArchConfig, ShapeConfig
-from repro.core import PrecisionPolicy, AMP_BF16, get_policy
+from repro.core import PrecisionPolicy, AMP_BF16
 from repro.models.lm import (
     init_cache,
     init_lm,
@@ -171,7 +170,8 @@ def build_decode_step(cfg: LMArchConfig, shape: ShapeConfig,
             return whisper_decode_step(params, cache, tokens, cfg, policy)
     else:
         cache_shape = jax.eval_shape(
-            lambda: init_cache(cfg, B, S, dtype=policy.compute_dtype))
+            lambda: init_cache(cfg, B, S,
+                               dtype=policy.at("serve/kv_cache").compute_dtype))
 
         def serve_step(params, cache, tokens):
             return lm_decode_step(params, cache, tokens, cfg, policy)

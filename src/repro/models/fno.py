@@ -8,14 +8,19 @@ Per-layer weights are stacked on a leading axis and the block loop runs
 under ``lax.scan`` so the HLO stays one-layer-sized (critical for the
 512-device dry-run compile times and for remat).
 
-All dense (real) ops run at ``policy.compute_dtype`` (the AMP set); the
-spectral pipeline runs per ``policy.spectral_dtype`` (the paper's
-contribution); parameters are f32 masters.
+Precision is site-addressed: dense (real) ops resolve ``fno/dense`` /
+``fno/layer<i>/dense`` (the AMP set), the spectral pipeline resolves
+``fno/layer<i>/spectral/{fft_in,contract,fft_out}``, and the output head
+``fno/proj_out`` (f32 by default); parameters are f32 masters.  When a
+``precision_rules(...)`` override makes layers heterogeneous (e.g. the
+last layer pinned to full precision), the block loop automatically
+unrolls instead of scanning so each layer can compile at its own
+formats.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,6 +99,43 @@ def _positional_grid(spatial: Sequence[int], dtype) -> jnp.ndarray:
     return jnp.stack(grids, axis=0).astype(dtype)  # (ndim, *spatial)
 
 
+def _layer_sites(policy: PrecisionPolicy, model: str, layer: int):
+    """The resolved precision of one block layer (dense + spectral stages)."""
+    base = f"{model}/layer{layer}"
+    return (
+        policy.at(f"{base}/dense"),
+        policy.at(f"{base}/spectral/fft_in"),
+        policy.at(f"{base}/spectral/contract"),
+        policy.at(f"{base}/spectral/fft_out"),
+    )
+
+
+def layers_uniform(policy: PrecisionPolicy, model: str, n_layers: int) -> bool:
+    """True when every layer resolves to the same formats, so the block
+    loop can run as one ``lax.scan``; per-layer ``precision_rules``
+    overrides make this False and the caller unrolls instead."""
+    first = _layer_sites(policy, model, 0)
+    return all(_layer_sites(policy, model, l) == first for l in range(1, n_layers))
+
+
+def apply_block_loop(block, h, stacked, policy: PrecisionPolicy, model: str,
+                     n_layers: int):
+    """Run ``block(h, layer_params, layer_idx)`` over a stacked layer pytree.
+
+    One ``lax.scan`` when every layer resolves to the same formats (HLO
+    stays one-layer-sized); an unrolled loop when per-layer
+    ``precision_rules`` make the layers heterogeneous, so each layer
+    lowers at its own formats.  Shared by the FNO and SFNO block loops.
+    """
+    if layers_uniform(policy, model, n_layers):
+        h, _ = jax.lax.scan(lambda c, lp: (block(c, lp, 0), None), h, stacked)
+        return h
+    for l in range(n_layers):
+        lp = jax.tree_util.tree_map(lambda v: v[l], stacked)
+        h = block(h, lp, l)
+    return h
+
+
 def fno_apply(
     params: dict,
     x: jnp.ndarray,
@@ -103,7 +145,7 @@ def fno_apply(
     """x: (batch, in_channels, *spatial) -> (batch, out_channels, *spatial)."""
     B = x.shape[0]
     spatial = x.shape[2:]
-    cdt = policy.compute_dtype
+    cdt = policy.at("fno/dense").compute_dtype
 
     if cfg.positional_embedding:
         pos = _positional_grid(spatial, x.dtype)
@@ -117,7 +159,7 @@ def fno_apply(
     h = _linear(params["lift2"], h, cdt)
     h = jnp.moveaxis(h, -1, 1)  # (B, hidden, *spatial)
 
-    def block(h, layer_params):
+    def block(h, layer_params, layer: int):
         # Full-DP layout: at FNO sizes (~2-50M params) the weights are tiny,
         # so shard batch over EVERY mesh axis and replicate weights — FFTs
         # and contractions become embarrassingly parallel and the only
@@ -127,22 +169,25 @@ def fno_apply(
         # the mesh) lives in repro.dist, not here.
         h = constrain_spatial(h)
         spect, skip = layer_params
+        ldt = policy.at(f"fno/layer{layer}/dense").compute_dtype
         y = spectral_conv_apply(
-            spect, h, cfg.modes, policy, use_pallas=cfg.use_pallas
-        ).astype(cdt)
+            spect, h, cfg.modes, policy, use_pallas=cfg.use_pallas,
+            site=f"fno/layer{layer}/spectral",
+        ).astype(ldt)
         s = jnp.moveaxis(
-            _linear(skip, jnp.moveaxis(h, 1, -1), cdt), -1, 1
+            _linear(skip, jnp.moveaxis(h, 1, -1), ldt), -1, 1
         )
-        return jax.nn.gelu(y + s), None
+        return jax.nn.gelu(y + s)
 
     h = h.astype(cdt)
-    h, _ = jax.lax.scan(block, h, (params["spectral"], params["skips"]))
+    h = apply_block_loop(block, h, (params["spectral"], params["skips"]),
+                         policy, "fno", cfg.n_layers)
 
     # projection
     h = jnp.moveaxis(h, 1, -1)
     h = _linear(params["proj1"], h, cdt)
     h = jax.nn.gelu(h)
-    h = _linear(params["proj2"], h, jnp.float32)  # output head in f32
+    h = _linear(params["proj2"], h, policy.at("fno/proj_out").compute_dtype)
     return jnp.moveaxis(h, -1, 1)
 
 

@@ -12,7 +12,6 @@ becomes a masked mean over the k candidates with κ an MLP on [x, y].
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,7 +93,8 @@ def gino_apply(
       dec_mask   (B, Nq, k)
     Returns (B, Nq, out_features).
     """
-    cdt = policy.compute_dtype
+    cdt = policy.at("gino/dense").compute_dtype
+    head_dt = policy.at("gino/proj_out").compute_dtype
     G = cfg.latent_grid
     lat_xyz = _latent_coords(G)
 
@@ -111,7 +111,7 @@ def gino_apply(
             dec_idx, dec_mask, cdt,
         )
         out = jax.nn.gelu(_linear(params["head1"], out, cdt))
-        return _linear(params["head2"], out, jnp.float32)
+        return _linear(params["head2"], out, head_dt)
 
     return jax.vmap(one)(
         batch["points"], batch["feats"], batch["enc_idx"], batch["enc_mask"],

@@ -9,12 +9,11 @@ Attention comes in three executable forms:
   * decode (one query against a KV cache, optionally ring-buffered SWA).
 
 All matmuls take ``preferred_element_type=f32`` (MXU accumulate) with
-storage at the policy's compute dtype.
+storage at the dtype the caller resolved from the ``lm/dense`` precision
+site — these helpers are below the rule table and never consult it.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

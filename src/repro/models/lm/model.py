@@ -18,7 +18,6 @@ dry-run compile tractable and gives remat a natural boundary.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -161,11 +160,12 @@ def _attn_forward(ap, h, positions, window, cfg: LMArchConfig, dtype):
                       preferred_element_type=jnp.float32).astype(dtype)
 
 
-def _ffn_forward(fp, h, cfg: LMArchConfig, dtype):
+def _ffn_forward(fp, h, cfg: LMArchConfig, dtype, router_dtype=jnp.float32):
     if cfg.moe_experts:
         B, S, d = h.shape
         out, aux = moe_apply(fp, h.reshape(B * S, d), cfg.moe_top_k,
-                             cfg.capacity_factor, dtype)
+                             cfg.capacity_factor, dtype,
+                             router_dtype=router_dtype)
         return out.reshape(B, S, d), aux
     return swiglu(fp, h, dtype), jnp.zeros((), jnp.float32)
 
@@ -189,8 +189,14 @@ def lm_forward(
     vlm: ``patch_embeds`` (B, Np, d) are projected and prepended.
     audio/enc usage can pass ``inputs_embeds`` directly instead of tokens.
     ``remat=True`` checkpoints each layer (training at 4k×256 needs it).
+
+    Precision resolves through the rule table: the dense mixer/FFN set at
+    ``lm/dense``, the (reduction-sensitive) MoE router at ``lm/router``
+    and the unembedding head at ``lm/proj_out`` (both f32 by default).
     """
-    dtype = policy.compute_dtype
+    dtype = policy.at("lm/dense").compute_dtype
+    router_dtype = policy.at("lm/router").compute_dtype
+    head_dtype = policy.at("lm/proj_out").compute_dtype
     if inputs_embeds is not None:
         h = inputs_embeds.astype(dtype)
     else:
@@ -219,7 +225,11 @@ def lm_forward(
             mix = 0.5 * (a + s)
         h = h + mix
         hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
-        f, a_loss = _ffn_forward(lp.get("ffn"), hn, cfg, dtype) if "ffn" in lp else (0.0, 0.0)
+        f, a_loss = (
+            _ffn_forward(lp.get("ffn"), hn, cfg, dtype, router_dtype)
+            if "ffn" in lp
+            else (0.0, 0.0)
+        )
         h = h + f
         return (h, aux + a_loss), None
 
@@ -231,8 +241,8 @@ def lm_forward(
                                (params["layers"], windows))
     h = constrain_bsd(rmsnorm(h, params["final_norm"], cfg.norm_eps))
     unembed = params.get("unembed", params["embed"])
-    logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
-                        unembed.astype(jnp.float32))
+    logits = jnp.einsum("bsd,vd->bsv", h.astype(head_dtype),
+                        unembed.astype(head_dtype))
     logits = constrain(logits, "dp", "seq", None)  # S-sharded CE
     return logits, aux
 
@@ -341,7 +351,9 @@ def lm_decode_step(
     """One serve step: returns (logits (B, V) f32, new cache).
 
     ``cache['step']`` is (B,): per-slot position clocks."""
-    dtype = policy.compute_dtype
+    dtype = policy.at("lm/dense").compute_dtype
+    router_dtype = policy.at("lm/router").compute_dtype
+    head_dtype = policy.at("lm/proj_out").compute_dtype
     pos = cache["step"]                          # (B,)
     h = params["embed"][tokens].astype(dtype)   # (B, d)
     windows = layer_windows(cfg)
@@ -370,7 +382,8 @@ def lm_decode_step(
         hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
         if "ffn" in lp:
             if cfg.moe_experts:
-                f, _ = moe_apply(lp["ffn"], hn, cfg.moe_top_k, cfg.capacity_factor, dtype)
+                f, _ = moe_apply(lp["ffn"], hn, cfg.moe_top_k, cfg.capacity_factor,
+                                 dtype, router_dtype=router_dtype)
             else:
                 f = swiglu(lp["ffn"], hn, dtype)
             h = h + f
@@ -379,7 +392,7 @@ def lm_decode_step(
     h, new_xs = jax.lax.scan(block, h, (params["layers"], windows, xs_cache))
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     unembed = params.get("unembed", params["embed"])
-    logits = jnp.einsum("bd,vd->bv", h.astype(jnp.float32), unembed.astype(jnp.float32))
+    logits = jnp.einsum("bd,vd->bv", h.astype(head_dtype), unembed.astype(head_dtype))
     new_cache = dict(new_xs)
     new_cache["step"] = pos + 1
     return logits, new_cache

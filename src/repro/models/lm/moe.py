@@ -19,13 +19,13 @@ expert GEMMs shard through the *weights'* sharding (EP over model when E
 divides — deepseek 64/16; ff-dim sharding fallback for granite-moe's
 indivisible E=40).
 
-The router runs in f32 (reduction-sensitive, mirroring the AMP blocklist
-rule the paper's precision policy encodes); expert GEMMs follow the
-policy's compute dtype with f32 accumulation.
+The router is reduction-sensitive, so its dtype resolves from the
+``lm/router`` precision site (f32 under every registry rule set — the
+AMP-blocklist rule the shared table encodes); expert GEMMs follow the
+``lm/dense`` compute dtype with f32 accumulation.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -56,6 +56,7 @@ def moe_apply(
     top_k: int,
     capacity_factor: float,
     dtype,
+    router_dtype=jnp.float32,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (out (T, d), aux_loss scalar)."""
     T, d = x.shape
@@ -66,11 +67,12 @@ def moe_apply(
         xg = constrain(x.reshape(G, T // G, d), "dp", None, None)
         outs, auxes = jax.vmap(
             lambda xi: _moe_one_group(params, xi, top_k, capacity_factor,
-                                      dtype, use_constraints=False)
+                                      dtype, router_dtype,
+                                      use_constraints=False)
         )(xg)
         out = constrain(outs, "dp", None, None).reshape(T, d)
         return out, jnp.mean(auxes)
-    return _moe_one_group(params, x, top_k, capacity_factor, dtype)
+    return _moe_one_group(params, x, top_k, capacity_factor, dtype, router_dtype)
 
 
 def _moe_one_group(
@@ -79,6 +81,7 @@ def _moe_one_group(
     top_k: int,
     capacity_factor: float,
     dtype,
+    router_dtype=jnp.float32,
     use_constraints: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     # sharding constraints are illegal under the grouped vmap; the caller
@@ -89,9 +92,11 @@ def _moe_one_group(
     E = params["router"].shape[1]
     C = max(1, int(top_k * T * capacity_factor / E))
 
-    # --- routing in f32 ---
-    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
-    probs = jax.nn.softmax(logits, axis=-1)
+    # --- routing at the lm/router site dtype (f32 under every registry
+    # rule set: top-k and the balance loss are reduction-sensitive) ---
+    logits = jnp.einsum("td,de->te", x.astype(router_dtype),
+                        params["router"].astype(router_dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     gate_vals, expert_ids = jax.lax.top_k(probs, top_k)        # (T, k)
     gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
 

@@ -12,7 +12,6 @@ makes the long_500k cell runnable.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -55,8 +54,14 @@ def _split_proj(params, u, d_inner, d_state, n_heads, dtype):
 def ssd_forward(
     params, u: jnp.ndarray, cfg, policy=FULL
 ) -> jnp.ndarray:
-    """u: (B, S, d_model) -> (B, S, d_model); chunked SSD over S."""
-    dtype = policy.compute_dtype
+    """u: (B, S, d_model) -> (B, S, d_model); chunked SSD over S.
+
+    Dense projections resolve the ``lm/dense`` site; the intra-chunk
+    score contraction goes through ``lm/ssd/spectral/contract`` so the
+    mixed spectral rule sets reach the SSM family's GEMMs too
+    (DESIGN.md §5)."""
+    dtype = policy.at("lm/dense").compute_dtype
+    ctr = policy.at("lm/ssd/spectral/contract")
     B, S, _ = u.shape
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     Q = cfg.ssm_chunk
@@ -95,7 +100,7 @@ def ssd_forward(
         tri = jnp.tril(jnp.ones((Q, Q), bool))
         delta = jnp.where(tri[None, :, :, None], delta, -jnp.inf)
         L = jnp.exp(delta)
-        scores = contract("bqn,bsn->bqs", cq, bq, policy=policy)  # (B,Q,Qs)
+        scores = contract("bqn,bsn->bqs", cq, bq, policy=ctr)  # (B,Q,Qs)
         xdt = xq * dtq[..., None]                    # (B,Q,H,P) dt-weighted
         y_intra = jnp.einsum("bqs,bqsh,bshp->bqhp", scores, L, xdt,
                              preferred_element_type=jnp.float32)
@@ -136,7 +141,7 @@ def ssd_decode_step(
     params, u: jnp.ndarray, state: jnp.ndarray, cfg, policy=FULL
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One-token recurrent update.  u: (B, d_model); state (B, H, P, N)."""
-    dtype = policy.compute_dtype
+    dtype = policy.at("lm/dense").compute_dtype
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     x, z, Bc, Cc, dt = _split_proj(params, u, cfg.d_inner, N, H, dtype)
     A = -jnp.exp(params["A_log"])

@@ -13,12 +13,12 @@ the cross-KV projected once from the encoder memory — the 32k-frame
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import PrecisionPolicy, FULL
+from repro.core import FULL
 from repro.configs.base import LMArchConfig
 from .common import apply_rope, apply_rope_one, decode_attention, gqa_attention, init_swiglu, rmsnorm, swiglu
 from .model import FULL_WINDOW, _init_attn
@@ -82,7 +82,7 @@ def _mha(ap, hq, hkv, q_pos, k_pos, causal, cfg, dtype):
 def whisper_encode(params, frames: jnp.ndarray, cfg, policy=FULL,
                    remat: bool = False) -> jnp.ndarray:
     """frames: (B, S, d) stub embeddings -> encoder memory (B, S, d)."""
-    dtype = policy.compute_dtype
+    dtype = policy.at("lm/dense").compute_dtype
     h = frames.astype(dtype)
     S = h.shape[1]
     pos = jnp.arange(S)
@@ -106,7 +106,8 @@ def whisper_forward(
     remat: bool = False,
 ) -> jnp.ndarray:
     """Training forward: (B,S,d) frames + (B,T) decoder tokens -> logits."""
-    dtype = policy.compute_dtype
+    dtype = policy.at("lm/dense").compute_dtype
+    head_dt = policy.at("lm/proj_out").compute_dtype
     memory = whisper_encode(params, frames, cfg, policy, remat=remat)
     h = params["embed"][dec_tokens].astype(dtype)
     T = h.shape[1]
@@ -127,14 +128,20 @@ def whisper_forward(
         block = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable)
     h, _ = jax.lax.scan(block, h, params["dec"])
     h = rmsnorm(h, params["dec_norm"], cfg.norm_eps)
-    return jnp.einsum("btd,vd->btv", h.astype(jnp.float32),
-                      params["embed"].astype(jnp.float32))
+    return jnp.einsum("btd,vd->btv", h.astype(head_dt),
+                      params["embed"].astype(head_dt))
 
 
 def init_whisper_cache(params, memory: jnp.ndarray, cfg, batch: int,
-                       policy=FULL, dtype=jnp.bfloat16) -> Dict:
-    """Precompute cross-KV from the encoder memory; zero self-KV ring."""
-    cdt = policy.compute_dtype
+                       policy=FULL, dtype=None) -> Dict:
+    """Precompute cross-KV from the encoder memory; zero self-KV ring.
+
+    The KV storage dtype resolves from the ``serve/kv_cache`` site unless
+    an explicit ``dtype`` is passed (f32 under ``full`` keeps decode
+    exact; AMP rule sets store bf16/fp16 for the memory saving)."""
+    cdt = policy.at("lm/dense").compute_dtype
+    if dtype is None:
+        dtype = policy.at("serve/kv_cache").compute_dtype
     L = cfg.dec_layers or cfg.n_layers
     S = memory.shape[1]
     Hk, hd = cfg.n_kv_heads, cfg.hd
@@ -166,7 +173,8 @@ def init_whisper_cache(params, memory: jnp.ndarray, cfg, batch: int,
 def whisper_decode_step(params, cache: Dict, tokens: jnp.ndarray, cfg,
                         policy=FULL) -> Tuple[jnp.ndarray, Dict]:
     """One decoder token against cached self+cross KV."""
-    dtype = policy.compute_dtype
+    dtype = policy.at("lm/dense").compute_dtype
+    head_dt = policy.at("lm/proj_out").compute_dtype
     pos = cache["step"]                          # (B,) per-slot clocks
     h = params["embed"][tokens].astype(dtype)
     B = h.shape[0]
@@ -213,8 +221,8 @@ def whisper_decode_step(params, cache: Dict, tokens: jnp.ndarray, cfg,
 
     h, new_xs = jax.lax.scan(block, h, (params["dec"], xs))
     h = rmsnorm(h, params["dec_norm"], cfg.norm_eps)
-    logits = jnp.einsum("bd,vd->bv", h.astype(jnp.float32),
-                        params["embed"].astype(jnp.float32))
+    logits = jnp.einsum("bd,vd->bv", h.astype(head_dt),
+                        params["embed"].astype(head_dt))
     new_cache = dict(new_xs)
     new_cache["step"] = pos + 1
     return logits, new_cache

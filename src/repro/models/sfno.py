@@ -7,22 +7,21 @@ convolution theorem) -> iSHT, plus a pointwise skip, GELU.
 The Legendre transforms and the spectral contraction are GEMMs, so the
 paper's mixed-precision pipeline applies verbatim: tanh pre-activation
 before the SHT, half-precision storage of the spherical spectrum
-(boundary-quantised), contraction at half with f32 accumulation.
+(boundary-quantised), contraction at half with f32 accumulation.  Every
+stage resolves its format through the precision rule table at the
+``sfno/layer<i>/spectral/*`` sites — the stabilise->quantise sequence is
+the shared site helpers, not an inline re-implementation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import PrecisionPolicy, FULL, ComplexPair
 from repro.dist.constrain import constrain_spatial
-from repro.core.contraction import contract
-from repro.core.precision import quantize_complex
-from repro.core.stabilizer import get_stabilizer
-from .fno import _linear, _linear_init
+from .fno import _linear, _linear_init, apply_block_loop
 from .sht import sht_forward, sht_inverse
 
 
@@ -66,20 +65,21 @@ def init_sfno(key: jax.Array, cfg: SFNOConfig) -> dict:
     return params
 
 
-def _spherical_conv(h, w, cfg: SFNOConfig, policy: PrecisionPolicy):
+def _spherical_conv(h, w, cfg: SFNOConfig, policy: PrecisionPolicy,
+                    site: str = "sfno/layer0/spectral"):
     """h: (B, C, nlat, nlon) -> (B, C, nlat, nlon) via spherical spectrum."""
-    if policy.spectral_is_half and policy.stabilizer:
-        h = get_stabilizer(policy.stabilizer)(h)
-    coeffs = sht_forward(h.astype(jnp.float32), cfg.lmax, cfg.mmax)  # (B,C,l,m)
-    if policy.spectral_is_half:
-        coeffs = quantize_complex(coeffs, policy.spectral_dtype)
+    fft_in = policy.at(f"{site}/fft_in")
+    ctr = policy.at(f"{site}/contract")
+    fft_out = policy.at(f"{site}/fft_out")
+    coeffs = sht_forward(fft_in.stabilize(h).astype(jnp.float32),
+                         cfg.lmax, cfg.mmax, precision=fft_in)  # (B,C,l,m)
     wc = jax.lax.complex(w["w_re"], w["w_im"])  # (i, o, l)
-    out = contract("bilm,iol->bolm", coeffs, wc, policy=policy)
+    out = ctr.contract("bilm,iol->bolm", coeffs, wc)
     if isinstance(out, ComplexPair):
         out = out.to_complex()
     y = sht_inverse(out.astype(jnp.complex64), cfg.nlat, cfg.nlon)
-    if policy.spectral_is_half:
-        y = y.astype(policy.spectral_dtype)
+    if fft_out.spectral_is_half:
+        y = y.astype(fft_out.compute_dtype)
     return y
 
 
@@ -87,25 +87,28 @@ def sfno_apply(
     params: dict, x: jnp.ndarray, cfg: SFNOConfig, policy: PrecisionPolicy = FULL
 ) -> jnp.ndarray:
     """x: (B, in_channels, nlat, nlon) -> (B, out_channels, nlat, nlon)."""
-    cdt = policy.compute_dtype
+    cdt = policy.at("sfno/dense").compute_dtype
     h = jnp.moveaxis(x, 1, -1)
     h = _linear(params["lift1"], h, cdt)
     h = jax.nn.gelu(h)
     h = _linear(params["lift2"], h, cdt)
     h = jnp.moveaxis(h, -1, 1)
 
-    def block(h, layer):
+    def block(h, layer, layer_idx: int):
         h = constrain_spatial(h)
         w, skip = layer
-        y = _spherical_conv(h, w, cfg, policy).astype(cdt)
-        s = jnp.moveaxis(_linear(skip, jnp.moveaxis(h, 1, -1), cdt), -1, 1)
-        return jax.nn.gelu(y + s), None
+        ldt = policy.at(f"sfno/layer{layer_idx}/dense").compute_dtype
+        y = _spherical_conv(h, w, cfg, policy,
+                            site=f"sfno/layer{layer_idx}/spectral").astype(ldt)
+        s = jnp.moveaxis(_linear(skip, jnp.moveaxis(h, 1, -1), ldt), -1, 1)
+        return jax.nn.gelu(y + s)
 
     h = h.astype(cdt)
-    h, _ = jax.lax.scan(block, h, (params["spectral"], params["skips"]))
+    h = apply_block_loop(block, h, (params["spectral"], params["skips"]),
+                         policy, "sfno", cfg.n_layers)
 
     h = jnp.moveaxis(h, 1, -1)
     h = _linear(params["proj1"], h, cdt)
     h = jax.nn.gelu(h)
-    h = _linear(params["proj2"], h, jnp.float32)
+    h = _linear(params["proj2"], h, policy.at("sfno/proj_out").compute_dtype)
     return jnp.moveaxis(h, -1, 1)

@@ -17,7 +17,6 @@ import functools
 import math
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -45,10 +44,16 @@ def legendre_matrices(nlat: int, lmax: int, mmax: int) -> Tuple[np.ndarray, np.n
     return P, x, w
 
 
-def sht_forward(f: jnp.ndarray, lmax: int, mmax: int) -> jnp.ndarray:
+def sht_forward(f: jnp.ndarray, lmax: int, mmax: int, precision=None) -> jnp.ndarray:
     """Analysis: f (..., nlat, nlon) real -> coeffs (..., lmax, mmax) complex.
 
     coeffs[l,m] = Σ_lat w_lat P̄_lm(x_lat) · (2π/nlon)·rfft(f)[lat, m]
+
+    ``precision`` is an optional resolved ``SitePrecision`` (a
+    ``*/spectral/fft_in`` site): the transform itself runs in f32 — like
+    the planar FFT, there is no half SHT on TPU — and the output spectrum
+    is boundary-quantised onto the site's storage grid (Thm 3.2's
+    representation error).
     """
     nlat, nlon = f.shape[-2], f.shape[-1]
     P, _, w = legendre_matrices(nlat, lmax, mmax)
@@ -56,7 +61,10 @@ def sht_forward(f: jnp.ndarray, lmax: int, mmax: int) -> jnp.ndarray:
     Fm = jnp.fft.rfft(f.astype(jnp.float32), axis=-1) * (2.0 * math.pi / nlon)
     Fm = Fm[..., :mmax]  # (..., lat, m)
     # coeffs[..., l, m] = Σ_lat Pw[m, l, lat] Fm[..., lat, m]
-    return jnp.einsum("mlt,...tm->...lm", Pw.astype(jnp.complex64), Fm)
+    coeffs = jnp.einsum("mlt,...tm->...lm", Pw.astype(jnp.complex64), Fm)
+    if precision is not None:
+        coeffs = precision.quantize(coeffs)
+    return coeffs
 
 
 def sht_inverse(coeffs: jnp.ndarray, nlat: int, nlon: int) -> jnp.ndarray:

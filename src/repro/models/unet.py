@@ -8,7 +8,6 @@ mixed-precision FNO saves more memory than AMP-on-U-Net.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -82,7 +81,8 @@ def unet_apply(
     params: dict, x: jnp.ndarray, cfg: UNetConfig, policy: PrecisionPolicy = FULL
 ) -> jnp.ndarray:
     """x: (B, C, H, W) -> (B, out, H, W).  H, W must be divisible by 2^depth."""
-    cdt = policy.compute_dtype
+    cdt = policy.at("unet/dense").compute_dtype
+    head_dt = policy.at("unet/proj_out").compute_dtype
     h = x.astype(cdt)
     skips = []
     for blk in params["enc"]:
@@ -100,4 +100,4 @@ def unet_apply(
         h = jnp.concatenate([h, skip.astype(cdt)], axis=1)
         h = jax.nn.gelu(_conv(blk["c1"], h, cdt))
         h = jax.nn.gelu(_conv(blk["c2"], h, cdt))
-    return _conv(params["head"], h.astype(jnp.float32), jnp.float32)
+    return _conv(params["head"], h.astype(head_dt), head_dt)

@@ -10,8 +10,6 @@ schedule on the production mesh.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

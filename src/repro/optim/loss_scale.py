@@ -4,8 +4,10 @@ The paper shows (§B.5, Fig. 10) that loss scaling *alone* cannot rescue a
 naïve half-precision FNO — the forward FFT overflows before the loss is
 even computed, and AMP's scale collapses to an infinitesimal value.  With
 the tanh stabiliser in place, loss scaling resumes its normal job: keeping
-small fp16 *gradients* from flushing to zero.  bf16 policies skip it
-(``PrecisionPolicy.requires_loss_scaling``).
+small fp16 *gradients* from flushing to zero.  Whether a training run
+needs it is decided by the resolved precision rules — the
+``train/loss_scale`` site (:func:`loss_scaling_required`) — not by a
+policy bool: fp16-family rule sets turn it on, bf16 rule sets don't.
 """
 from __future__ import annotations
 
@@ -14,7 +16,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .adamw import all_finite
+
+
+def loss_scaling_required(policy) -> bool:
+    """Resolve the ``train/loss_scale`` site of a precision rule set —
+    this is the single switch the trainer consults (scoped
+    ``precision_rules`` overrides apply here too)."""
+    return bool(policy.at("train/loss_scale").loss_scaling)
 
 
 class LossScaleState(NamedTuple):

@@ -1,0 +1,42 @@
+"""repro.precision — site-addressed mixed-precision rules.
+
+The precision twin of ``repro.dist``: one rule table mapping site
+patterns (``"*/spectral/contract"``, ``"serve/kv_cache"``, …) onto
+formats, resolved per call-site via ``policy.at(site)`` and overridable
+for a scope with ``precision_rules(...)``.
+
+Public API:
+  PrecisionPolicy / get_policy / POLICIES   — named rule sets
+  SitePrecision                             — resolved site (cast /
+                                              stabilize / quantize /
+                                              contract helpers)
+  SiteRule / FULL_PRECISION / DEFAULT_RULES — rule-table entries
+  precision_rules(...)                      — scoped overrides
+  describe(policy)                          — canonical-site report
+"""
+from .rules import (  # noqa: F401
+    DEFAULT_RULES,
+    FULL_PRECISION,
+    SiteRule,
+    UNSET,
+    current_overrides,
+    precision_rules,
+    site_matches,
+)
+from .policy import (  # noqa: F401
+    AMP_BF16,
+    AMP_FP16,
+    CANONICAL_SITES,
+    FULL,
+    HALF_FNO_ONLY,
+    MIXED_FNO_BF16,
+    MIXED_FNO_FP16,
+    POLICIES,
+    SIM_FP8_E4M3,
+    SIM_FP8_E5M2,
+    PrecisionPolicy,
+    SitePrecision,
+    describe,
+    get_policy,
+    resolve_site,
+)

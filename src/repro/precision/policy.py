@@ -1,0 +1,319 @@
+"""Rules-based precision policies and resolved per-site precision.
+
+``PrecisionPolicy`` is now a *named rule set* over the shared site table
+(:mod:`repro.precision.rules`), replacing the flat 4-dtype dataclass.
+``policy.at(site)`` resolves one site to a :class:`SitePrecision`
+carrying the ``cast / stabilize / quantize / contract`` helpers every
+consumer needs — models, kernels, trainer, serving and launch all speak
+in sites and never hand-thread dtypes.
+
+The registry policies (``full``, ``amp_*``, ``mixed_fno_*``,
+``half_fno_only``) are rebuilt as rule sets that resolve to exactly the
+same formats the old dataclass fields encoded, so their numerics are
+bit-identical; the simulated fp8 formats (Appendix B.11) join the same
+registry as ``sim_fp8_e4m3`` / ``sim_fp8_e5m2`` rule sets.
+
+Canonical site vocabulary (patterns in the rule tables address these):
+
+  ``<model>/dense``                 real-valued AMP set (lift, skips,
+                                    projections, attention/FFN matmuls)
+  ``<model>/layer<i>/spectral/fft_in``    stabilise + boundary-quantise
+  ``<model>/layer<i>/spectral/contract``  spectral contraction storage/accum
+  ``<model>/layer<i>/spectral/fft_out``   iFFT output storage
+  ``<model>/proj_out``              output heads (f32 by default)
+  ``lm/router``                     MoE router (f32 by default)
+  ``serve/kv_cache``                KV-cache storage dtype
+  ``train/loss_scale``              dynamic-loss-scaling switch
+  ``params``                        master weight storage
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .rules import (
+    Entry,
+    SiteRule,
+    normalize_entries,
+    resolve_fields,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SitePrecision:
+    """The fully-resolved precision of one site.
+
+    Carries the four helpers the paper's pipeline needs — ``cast`` (AMP
+    boundary), ``stabilize`` (pre-FFT), ``quantize`` (half/fp8 boundary
+    rounding), ``contract`` (memory-greedy mixed-precision einsum) — and
+    quacks like the old policy for the contraction executor
+    (``spectral_dtype`` / ``spectral_is_half`` / ``accum_dtype``).
+    """
+
+    site: str = dataclasses.field(compare=False)
+    compute: Optional[Any] = None
+    accum: Any = jnp.float32
+    stabilizer: Optional[str] = None
+    quantize_fmt: Optional[str] = None
+    loss_scaling: bool = False
+
+    # -- dtype views ---------------------------------------------------------
+    @property
+    def compute_dtype(self):
+        return self.compute if self.compute is not None else jnp.float32
+
+    @property
+    def accum_dtype(self):
+        return self.accum
+
+    @property
+    def spectral_dtype(self):
+        """Split-real storage dtype for spectral data; None => complex64."""
+        return self.compute if self.quantize_fmt is not None else None
+
+    @property
+    def spectral_is_half(self) -> bool:
+        return self.quantize_fmt is not None
+
+    @property
+    def eps(self) -> float:
+        """Relative precision of this site's storage grid (theory checks)."""
+        from repro.core.precision import FORMAT_EPS
+
+        if self.quantize_fmt is not None and self.quantize_fmt != "half":
+            return FORMAT_EPS[self.quantize_fmt]
+        key = (
+            jnp.dtype(self.spectral_dtype).name
+            if self.spectral_dtype is not None
+            else "float32"
+        )
+        return FORMAT_EPS[key]
+
+    # -- helpers -------------------------------------------------------------
+    def cast(self, tree):
+        """Cast a pytree of real floating arrays to the compute dtype."""
+        dt = self.compute_dtype
+
+        def _c(x):
+            if isinstance(x, jnp.ndarray) and jnp.issubdtype(x.dtype, jnp.floating):
+                return x.astype(dt)
+            return x
+
+        return jax.tree_util.tree_map(_c, tree)
+
+    def stabilize(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Apply the site's pre-FFT stabiliser.  Only active when the site
+        actually quantises (matching the paper: the stabiliser exists to
+        keep the *half* forward transform finite)."""
+        if self.quantize_fmt is None or not self.stabilizer:
+            return x
+        from repro.core.stabilizer import get_stabilizer
+
+        return get_stabilizer(self.stabilizer)(x)
+
+    def quantize(self, c: jnp.ndarray) -> jnp.ndarray:
+        """Round a complex tensor onto this site's storage grid: half
+        round-trip (Thm 3.2's representation error) or the simulated fp8
+        grid (Appendix B.11).  Identity when the site is full precision."""
+        if self.quantize_fmt is None:
+            return c
+        from repro.core.precision import quantize_complex, simulate_fp8
+
+        if self.quantize_fmt == "half":
+            return quantize_complex(c, self.compute)
+        re = simulate_fp8(jnp.real(c), self.quantize_fmt)
+        im = simulate_fp8(jnp.imag(c), self.quantize_fmt)
+        return jax.lax.complex(re, im)
+
+    def contract(self, expr: str, *operands, objective: str = "memory", cache=None):
+        """Memory-greedy contraction at this site's storage/accum dtypes."""
+        from repro.core.contraction import contract as _contract
+
+        return _contract(
+            expr, *operands, policy=self, objective=objective, cache=cache
+        )
+
+
+def resolve_site(site: str, rules: Tuple[Entry, ...]) -> SitePrecision:
+    f = resolve_fields(site, rules)
+    return SitePrecision(
+        site=site,
+        compute=f["compute"],
+        accum=f["accum"],
+        stabilizer=f["stabilize"],
+        quantize_fmt=f["quantize"],
+        loss_scaling=bool(f["loss_scaling"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# PrecisionPolicy — a named rule set
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """A named overlay of site rules over the shared DEFAULT_RULES table.
+
+    ``at(site)`` is the one resolution entry point; the legacy dtype
+    properties (``compute_dtype`` / ``spectral_dtype`` / ``stabilizer`` /
+    ``requires_loss_scaling``) are kept as *views* onto canonical sites
+    so policy-level introspection (benchmarks, reports) still reads
+    naturally — they resolve through the same tables, including any
+    active ``precision_rules`` scope.
+    """
+
+    name: str
+    rules: Tuple[Entry, ...] = ()
+
+    def at(self, site: str) -> SitePrecision:
+        return resolve_site(site, self.rules)
+
+    def with_rules(self, *entries, name: Optional[str] = None) -> "PrecisionPolicy":
+        """A new policy with ``entries`` layered on top (highest priority)."""
+        return PrecisionPolicy(
+            name=name or self.name, rules=normalize_entries(entries) + self.rules
+        )
+
+    # -- legacy facade -------------------------------------------------------
+    @property
+    def param_dtype(self):
+        return self.at("params").compute_dtype
+
+    @property
+    def compute_dtype(self):
+        return self.at("model/dense").compute_dtype
+
+    @property
+    def spectral_dtype(self):
+        return self.at("model/spectral/contract").spectral_dtype
+
+    @property
+    def accum_dtype(self):
+        return self.at("model/spectral/contract").accum_dtype
+
+    @property
+    def stabilizer(self):
+        return self.at("model/spectral/fft_in").stabilizer
+
+    @property
+    def requires_loss_scaling(self) -> bool:
+        return self.at("train/loss_scale").loss_scaling
+
+    @property
+    def spectral_is_half(self) -> bool:
+        return self.at("model/spectral/contract").spectral_is_half
+
+    @property
+    def eps(self) -> float:
+        return self.at("model/spectral/contract").eps
+
+    def cast_compute(self, tree):
+        return self.at("model/dense").cast(tree)
+
+    def cast_spectral(self, c: jnp.ndarray):
+        site = self.at("model/spectral/contract")
+        if site.spectral_dtype is None:
+            return c
+        from repro.core.precision import ComplexPair
+
+        return ComplexPair.from_complex(c, site.spectral_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry: the paper's settings as rule sets over the shared table
+# ---------------------------------------------------------------------------
+
+
+def _amp_rules(half) -> Tuple[Entry, ...]:
+    return (
+        ("*/dense", SiteRule(compute=half)),
+        ("serve/kv_cache", SiteRule(compute=half)),
+    )
+
+
+def _spectral_rules(half, quantize: str = "half") -> Tuple[Entry, ...]:
+    return (("*/spectral/*", SiteRule(compute=half, quantize=quantize, stabilize="tanh")),)
+
+
+_SCALE = (("train/loss_scale", SiteRule(loss_scaling=True)),)
+
+FULL = PrecisionPolicy(name="full")
+AMP_FP16 = PrecisionPolicy(name="amp_fp16", rules=_amp_rules(jnp.float16) + _SCALE)
+AMP_BF16 = PrecisionPolicy(name="amp_bf16", rules=_amp_rules(jnp.bfloat16))
+MIXED_FNO_FP16 = PrecisionPolicy(
+    name="mixed_fno_fp16",
+    rules=_spectral_rules(jnp.float16) + _amp_rules(jnp.float16) + _SCALE,
+)
+MIXED_FNO_BF16 = PrecisionPolicy(
+    name="mixed_fno_bf16",
+    rules=_spectral_rules(jnp.bfloat16) + _amp_rules(jnp.bfloat16),
+)
+# FNO block half, rest full — the "Half-Prec FNO only" bar in Fig. 3.
+HALF_FNO_ONLY = PrecisionPolicy(
+    name="half_fno_only", rules=_spectral_rules(jnp.float16) + _SCALE
+)
+# Simulated fp8 spectral pipelines (Appendix B.11): split-real fp16
+# storage whose values are rounded onto the fp8 grid at the FFT boundary.
+SIM_FP8_E4M3 = PrecisionPolicy(
+    name="sim_fp8_e4m3",
+    rules=_spectral_rules(jnp.float16, quantize="fp8_e4m3") + _SCALE,
+)
+SIM_FP8_E5M2 = PrecisionPolicy(
+    name="sim_fp8_e5m2",
+    rules=_spectral_rules(jnp.float16, quantize="fp8_e5m2") + _SCALE,
+)
+
+POLICIES = {
+    p.name: p
+    for p in [
+        FULL,
+        AMP_FP16,
+        AMP_BF16,
+        MIXED_FNO_FP16,
+        MIXED_FNO_BF16,
+        HALF_FNO_ONLY,
+        SIM_FP8_E4M3,
+        SIM_FP8_E5M2,
+    ]
+}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown precision policy {name!r}; have {sorted(POLICIES)}")
+
+
+#: Sites worth surfacing in reports / dry-run records.
+CANONICAL_SITES = (
+    "params",
+    "model/dense",
+    "model/spectral/fft_in",
+    "model/spectral/contract",
+    "model/spectral/fft_out",
+    "model/proj_out",
+    "lm/router",
+    "serve/kv_cache",
+    "train/loss_scale",
+)
+
+
+def describe(policy: PrecisionPolicy) -> dict:
+    """Human/JSON-friendly site table for a policy — what the dry-runs log
+    so a lowered cell records exactly which sites ran at which formats."""
+    out = {}
+    for site in CANONICAL_SITES:
+        s = policy.at(site)
+        out[site] = {
+            "compute": None if s.compute is None else jnp.dtype(s.compute).name,
+            "accum": jnp.dtype(s.accum).name,
+            "stabilize": s.stabilizer,
+            "quantize": s.quantize_fmt,
+            "loss_scaling": s.loss_scaling,
+        }
+    return out

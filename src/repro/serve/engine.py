@@ -16,7 +16,7 @@ This engine is what the decode_32k / long_500k dry-run cells lower: one
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +55,11 @@ class ServeEngine:
         self.max_len = max_len
         self.greedy = greedy
         self.mesh = mesh
+        # KV storage dtype comes from the serve/kv_cache site of the rule
+        # table (f32 under `full` for an exact decode contract; bf16/fp16
+        # under the AMP rule sets for the memory saving).
         self.cache = init_cache(cfg, n_slots, max_len,
-                                dtype=policy.compute_dtype)
+                                dtype=policy.at("serve/kv_cache").compute_dtype)
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.slot_pending: List[List[int]] = [[] for _ in range(n_slots)]
         step_fn = lambda p, c, t: lm_decode_step(p, c, t, cfg, policy)
@@ -113,7 +116,14 @@ class ServeEngine:
 
     # -- one engine tick -------------------------------------------------------
     def tick(self):
-        """Run one fused decode step for the slot pool."""
+        """Run one fused decode step for the slot pool.
+
+        The step that consumes a slot's *last* pending prompt token is also
+        the step whose logits define the first generated token — discarding
+        them (and re-feeding ``prompt[-1]`` next tick) would decode from a
+        skewed cache position, desynchronising the engine from a
+        straight-line ``lm_forward`` greedy decode.
+        """
         tokens = np.zeros((self.n_slots,), np.int32)
         for i, req in enumerate(self.slots):
             if req is None:
@@ -123,7 +133,8 @@ class ServeEngine:
             elif req.generated:
                 tokens[i] = req.generated[-1]
             else:
-                tokens[i] = req.prompt[-1] if req.prompt else 0
+                # empty-prompt request: decode from token 0
+                tokens[i] = 0
         with use_mesh(self.mesh):
             logits, self.cache = self._step(self.params, self.cache,
                                             jnp.asarray(tokens))
@@ -132,10 +143,11 @@ class ServeEngine:
             if req is None:
                 continue
             if self.slot_pending[i]:
-                self.slot_pending[i].pop(0)  # still prefilling this slot
-                if not self.slot_pending[i]:
-                    pass  # prompt consumed; next tick starts generation
-                continue
+                self.slot_pending[i].pop(0)
+                if self.slot_pending[i]:
+                    continue  # still prefilling this slot
+                # fall through: the prompt is consumed and this step's
+                # logits are the first generation
             req.generated.append(int(nxt[i]))
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True

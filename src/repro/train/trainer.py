@@ -28,12 +28,12 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import PrecisionPolicy, PrecisionSchedule, get_policy
+from repro.core import PrecisionPolicy, PrecisionSchedule
 from repro.optim import (
     AdamW,
-    AdamWState,
     all_finite,
     init_loss_scale,
+    loss_scaling_required,
     scale_loss,
     unscale_grads,
     update_loss_scale,
@@ -73,7 +73,7 @@ class Trainer:
         self.step = 0
         self.history: list = []
         self.stats = {"straggler_steps": 0, "skipped_steps": 0, "recompiles": 0}
-        self._steps_cache: Dict[str, Callable] = {}
+        self._steps_cache: Dict[Any, Callable] = {}
         self._preempted = False
         self._ckptr = (
             ckpt_lib.AsyncCheckpointer(config.ckpt_dir, config.keep_last_k)
@@ -119,7 +119,9 @@ class Trainer:
     def _build_step(self, policy: PrecisionPolicy) -> Callable:
         opt = self.cfg.optimizer
         nmicro = self.cfg.microbatches
-        use_scaling = policy.requires_loss_scaling
+        # decided by the resolved rule table (train/loss_scale site), so a
+        # precision_rules override can flip it per run without a new policy
+        use_scaling = loss_scaling_required(policy)
 
         def micro_grads(params, batch, scale_state):
             def scaled_loss(p, b):
@@ -172,10 +174,16 @@ class Trainer:
         return jax.jit(train_step, donate_argnums=(0, 1))
 
     def _step_fn(self, policy: PrecisionPolicy) -> Callable:
-        if policy.name not in self._steps_cache:
-            self._steps_cache[policy.name] = self._build_step(policy)
+        # key by the policy's own rules and the active precision_rules
+        # scope, not just the name: a step bakes the rules in at trace
+        # time, and with_rules overlays may share the parent's name
+        from repro.precision import current_overrides
+
+        key = (policy.name, policy.rules, current_overrides())
+        if key not in self._steps_cache:
+            self._steps_cache[key] = self._build_step(policy)
             self.stats["recompiles"] += 1
-        return self._steps_cache[policy.name]
+        return self._steps_cache[key]
 
     # -- the loop -------------------------------------------------------------
     def run(self, batch_fn: Callable[[int], Dict], steps: Optional[int] = None):

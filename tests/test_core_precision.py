@@ -8,14 +8,10 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (
     ComplexPair,
     FULL,
-    MIXED_FNO_BF16,
-    MIXED_FNO_FP16,
     PathCache,
-    PrecisionSystem,
     contract,
     get_policy,
     greedy_path,
-    path_flops,
     path_intermediate_bytes,
     precision_system_for,
     quantize_complex,
@@ -199,3 +195,80 @@ class TestContract:
             rtol=1e-5,
             atol=1e-5,
         )
+
+    @given(st.integers(min_value=0, max_value=10 ** 6))
+    @settings(max_examples=30, deadline=None)
+    def test_property_random_multi_operand_matches_einsum(self, seed):
+        """contract under FULL == jnp.einsum for randomized 3-4 operand
+        expressions (implicit-output convention, shared/contracted/batch
+        indices in arbitrary combinations)."""
+        rng = np.random.RandomState(seed)
+        letters = "abcdef"
+        dims = {ch: int(rng.randint(1, 5)) for ch in letters}
+        n_ops = int(rng.randint(3, 5))
+        terms = []
+        for _ in range(n_ops):
+            k = int(rng.randint(1, 4))
+            idx = rng.choice(len(letters), size=k, replace=False)
+            terms.append("".join(letters[i] for i in sorted(idx)))
+        expr = ",".join(terms)
+        ops = [
+            jnp.asarray(rng.randn(*[dims[c] for c in t]), jnp.float32)
+            for t in terms
+        ]
+        got = np.asarray(contract(expr, *ops, policy=FULL))
+        want = np.einsum(expr, *[np.asarray(o) for o in ops])
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Memory- vs FLOP-objective paths on the paper's spectral einsums
+# ---------------------------------------------------------------------------
+
+
+class TestObjectivePaths:
+    # the paper's dense / CP / Tucker spectral contractions (§4.2/§4.6)
+    SPECTRAL_CASES = [
+        ("bixy,ioxy->boxy", [(4, 8, 12, 12), (8, 8, 12, 12)]),
+        (
+            "bixy,r,ir,or,xr,yr->boxy",
+            [(4, 8, 12, 12), (6,), (8, 6), (8, 6), (12, 6), (12, 6)],
+        ),
+        (
+            "bixy,RSAB,iR,oS,xA,yB->boxy",
+            [(4, 8, 12, 12), (4, 4, 6, 6), (8, 4), (8, 4), (12, 6), (12, 6)],
+        ),
+        # 3-D CP (the setting where Table 10 reports the biggest saving)
+        (
+            "bixyz,r,ir,or,xr,yr,zr->boxyz",
+            [(2, 6, 8, 8, 8), (5,), (6, 5), (6, 5), (8, 5), (8, 5), (8, 5)],
+        ),
+    ]
+
+    @pytest.mark.parametrize("expr,shapes", SPECTRAL_CASES)
+    def test_memory_peak_never_exceeds_flops_path(self, expr, shapes):
+        p_mem = greedy_path(expr, shapes, "memory")
+        p_fl = greedy_path(expr, shapes, "flops")
+        peak_mem = path_intermediate_bytes(expr, shapes, p_mem)
+        peak_fl = path_intermediate_bytes(expr, shapes, p_fl)
+        assert peak_mem <= peak_fl, (expr, peak_mem, peak_fl)
+
+    @pytest.mark.parametrize("expr,shapes", SPECTRAL_CASES)
+    def test_both_objectives_compute_the_same_value(self, expr, shapes):
+        rng = np.random.RandomState(7)
+        ops = [jnp.asarray(rng.randn(*s), jnp.float32) for s in shapes]
+        a = np.asarray(contract(expr, *ops, policy=FULL, objective="memory"))
+        b = np.asarray(contract(expr, *ops, policy=FULL, objective="flops"))
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_parse_shared_with_path_search(self):
+        """contract hands its parse through to the cache miss path (no
+        re-parse), and cached calls skip the search entirely."""
+        cache = PathCache()
+        expr = "ab,bc,cd->ad"
+        shapes = [(3, 4), (4, 5), (5, 6)]
+        rng = np.random.RandomState(8)
+        ops = [jnp.asarray(rng.randn(*s), jnp.float32) for s in shapes]
+        contract(expr, *ops, policy=FULL, cache=cache)
+        contract(expr, *ops, policy=FULL, cache=cache)
+        assert cache.misses == 1 and cache.hits == 1

@@ -78,12 +78,14 @@ class TestSpectralConv:
     def test_naive_half_overflows_without_stabilizer(self):
         """Counterpart: without the stabiliser, the fp16 FFT boundary
         overflows for large inputs (reproduces the NaN failure)."""
-        import dataclasses
+        from repro.precision import SiteRule
 
         rng = np.random.RandomState(4)
         key = jax.random.PRNGKey(4)
         params = init_spectral_weights(key, 4, 4, (4, 4))
-        naive = dataclasses.replace(MIXED_FNO_FP16, stabilizer=None)
+        naive = MIXED_FNO_FP16.with_rules(
+            ("*/spectral/*", SiteRule(stabilize=None)), name="naive_fp16"
+        )
         x = _x(rng, (1, 4, 64, 64)) * 3e4
         y = spectral_conv_apply(params, x, (4, 4), naive)
         assert not np.isfinite(np.asarray(y, dtype=np.float32)).all()

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import ComplexPair, FULL, MIXED_FNO_BF16, get_policy
+from repro.core import ComplexPair, FULL, get_policy
 from repro.kernels import ops, ref
 from repro.kernels.spectral_contract import spectral_contract_pallas, vmem_bytes
 

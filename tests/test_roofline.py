@@ -57,7 +57,6 @@ class TestHLOParser:
         assert 2.0 < bwd.flops / fwd.flops < 4.5
 
     def test_collectives_counted_under_spmd(self):
-        import os
         if jax.device_count() < 2:
             pytest.skip("needs >1 device (run under dryrun env)")
         from jax.sharding import NamedSharding, PartitionSpec as P

@@ -6,14 +6,7 @@ import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.dist.sharding import (
-    batch_specs,
-    cache_specs,
-    dp_axes,
-    lm_param_specs,
-    pick_spec,
-    replication_report,
-)
+from repro.dist.sharding import batch_specs, lm_param_specs, pick_spec, replication_report
 from repro.launch.steps import build_step, params_shape
 from repro.configs.base import SHAPES, cell_is_runnable
 from repro.models.lm import init_lm
@@ -126,3 +119,29 @@ class TestServeEngine:
         done, _ = engine.run_until_done(
             [Request(uid=0, prompt=[1, 2], max_new_tokens=3)])
         assert len(done) == 1 and len(done[0].generated) == 3
+
+    def test_engine_matches_forward_greedy_decode(self):
+        """Regression for the final-prompt-token double-feed: the engine's
+        greedy output must equal a straight-line ``lm_forward`` greedy
+        decode.  Before the fix, the logits of the step consuming the last
+        prompt token were discarded and ``prompt[-1]`` was fed again, so
+        the first generated token came from a skewed cache position."""
+        from repro.models.lm import lm_forward
+
+        cfg = get_config("smollm-360m", smoke=True)
+        params = init_lm(jax.random.PRNGKey(7), cfg)
+        prompt = [3, 1, 4, 1, 5]
+        n_new = 5
+
+        toks = list(prompt)
+        ref = []
+        for _ in range(n_new):
+            logits, _ = lm_forward(params, jnp.asarray([toks]), cfg)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            ref.append(nxt)
+            toks.append(nxt)
+
+        engine = ServeEngine(params, cfg, n_slots=1, max_len=64)
+        done, _ = engine.run_until_done(
+            [Request(uid=0, prompt=prompt, max_new_tokens=n_new)])
+        assert done[0].generated == ref

@@ -5,19 +5,10 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import FULL, PrecisionSchedule, get_policy
+from repro.core import PrecisionSchedule
 from repro.models import FNOConfig, fno_apply, init_fno
-from repro.optim import (
-    AdamW,
-    all_finite,
-    compress_tree,
-    init_loss_scale,
-    scale_loss,
-    unscale_grads,
-    update_loss_scale,
-)
+from repro.optim import AdamW, compress_tree, init_loss_scale, unscale_grads, update_loss_scale
 from repro.train import Trainer, TrainerConfig, checkpoint, relative_h1, relative_l2
 from repro.train.losses import cross_entropy
 
