@@ -1,20 +1,23 @@
-"""Batched LM serving demo: continuous batching over the slot engine.
+"""Batched LM serving demo: the v2 Engine API over the slot engine.
 
 Loads a reduced config from the architecture pool (selectable with
-``--arch``; any of the 10 assigned ids), admits a stream of requests, and
-drives greedy decoding with per-slot KV caches / SSM state.
+``--arch``; any of the 10 assigned ids), submits a stream of requests
+through the scheduler (FCFS or shortest-prompt-first), and drives
+chunked-prefill decoding with per-request sampling:
 
     PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m
+    PYTHONPATH=src python examples/serve_lm.py --scheduler spf \\
+        --temperature 0.8 --top-p 0.9 --prefill-chunk 16
 """
 import argparse
-import time
+import json
 
 import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models.lm import init_lm
-from repro.serve import Request, ServeEngine
+from repro.serve import LMEngine, Request, SamplingParams
 
 
 def main():
@@ -22,29 +25,43 @@ def main():
     ap.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--scheduler", default="fcfs", choices=["fcfs", "spf"])
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens consumed per tick "
+                         "(default: auto — 8 dense, 1 MoE)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     if cfg.encoder_decoder:
         raise SystemExit("enc-dec serving demo: use whisper_decode_step directly")
     params = init_lm(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, n_slots=args.slots, max_len=64)
+    engine = LMEngine(params, cfg, n_slots=args.slots, max_len=64,
+                      scheduler=args.scheduler,
+                      prefill_chunk=args.prefill_chunk, seed=args.seed)
 
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
     rng = np.random.RandomState(0)
     reqs = [
         Request(uid=i, prompt=list(rng.randint(1, cfg.vocab, rng.randint(3, 8))),
-                max_new_tokens=8)
+                max_new_tokens=8, sampling=sampling)
         for i in range(args.requests)
     ]
-    t0 = time.perf_counter()
-    done, ticks = engine.run_until_done(reqs)
-    dt = time.perf_counter() - t0
-    total_tokens = sum(len(r.generated) for r in done)
-    print(f"arch={args.arch} slots={args.slots}: served {len(done)} requests, "
-          f"{total_tokens} tokens in {ticks} ticks ({dt:.2f}s; "
-          f"{total_tokens/dt:.1f} tok/s on CPU)")
+    for r in reqs:
+        engine.submit(r)
+    done, ticks = engine.drain()
+    stats = engine.stats()
+    print(f"arch={args.arch} slots={args.slots} scheduler={args.scheduler} "
+          f"chunk={engine.prefill_chunk}: served {stats['completed']} requests "
+          f"in {ticks} ticks ({stats['wall_s']:.2f}s; "
+          f"{stats['tokens_per_s']} tok/s on CPU)")
     for r in done[:3]:
         print(f"  req {r.uid}: prompt={r.prompt} -> generated={r.generated}")
+    print("stats:", json.dumps(stats, indent=1))
 
 
 if __name__ == "__main__":

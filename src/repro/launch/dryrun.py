@@ -32,14 +32,15 @@ from repro.dist import use_mesh
 from repro.dist.sharding import lm_param_specs, replication_report
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze_counts, model_flops, parse_hlo
-from repro.launch.steps import build_step, bundle_shardings
+from repro.launch.steps import build_prefill_chunk_step, build_step, bundle_shardings
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "benchmarks", "results", "dryrun.json")
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             policy_name: str = "amp_bf16", verbose: bool = True) -> dict:
+             policy_name: str = "amp_bf16", verbose: bool = True,
+             prefill_chunk: int = 0) -> dict:
     from repro.core import get_policy
     from repro.precision import describe
 
@@ -118,12 +119,36 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "useful_flops_ratio": (mf / global_flops) if global_flops else None,
         "replication": replication_report(bundle.params_shape, param_specs),
     })
+    if shape.kind == "decode" and prefill_chunk > 0 and not cfg.encoder_decoder:
+        # also lower the serve engine's chunked-prefill step against the
+        # same cache, so the record shows what chunking buys: the chunk
+        # step moves K tokens of weights-reads per tick instead of 1.
+        t1 = time.time()
+        cb = build_prefill_chunk_step(cfg, shape, get_policy(policy_name),
+                                      chunk=prefill_chunk)
+        c_in, c_out = bundle_shardings(cb, cfg, mesh, param_specs)
+        with use_mesh(mesh):
+            c_compiled = jax.jit(cb.step_fn, in_shardings=c_in,
+                                 out_shardings=c_out).lower(
+                cb.params_shape, cb.inputs["cache"], cb.inputs["tokens"],
+                cb.inputs["n_valid"]).compile()
+        c_counts = parse_hlo(c_compiled.as_text())
+        rec["prefill_chunk"] = {
+            "chunk": prefill_chunk,
+            "compile_s": round(time.time() - t1, 1),
+            "roofline": analyze_counts(c_counts, n_dev).to_dict(),
+            "collective_bytes_by_kind": c_counts.collective_by_kind,
+        }
+
     if verbose:
         print(f"== {bundle.description} on {mesh_name} ==")
         print("memory_analysis:", rec["memory_analysis"])
         print("cost_analysis (raw, loop bodies once):", rec["cost_analysis_raw"])
         print("collectives:", counts.collective_by_kind)
         print("roofline:", json.dumps(rec["roofline"], indent=2))
+        if "prefill_chunk" in rec:
+            print("prefill_chunk roofline:",
+                  json.dumps(rec["prefill_chunk"]["roofline"], indent=2))
     return rec
 
 
@@ -151,6 +176,9 @@ def main():
     ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--policy", default="amp_bf16")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="also lower the chunked-prefill serve step for "
+                         "decode cells at this chunk size (0 = off)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-done", action="store_true")
     args = ap.parse_args()
@@ -171,7 +199,8 @@ def main():
                     print(f"-- {arch} {shape} {mesh_name}: already done")
                     continue
                 try:
-                    rec = run_cell(arch, shape, mp, args.policy)
+                    rec = run_cell(arch, shape, mp, args.policy,
+                                   prefill_chunk=args.prefill_chunk)
                 except Exception as e:  # a failure here is a bug
                     traceback.print_exc()
                     rec = {"arch": arch, "shape": shape, "mesh": mesh_name,

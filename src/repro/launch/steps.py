@@ -23,6 +23,7 @@ from repro.models.lm import (
     init_whisper_cache,
     lm_decode_step,
     lm_forward,
+    lm_prefill_chunk,
     whisper_decode_step,
     whisper_encode,
     whisper_forward,
@@ -185,6 +186,36 @@ def build_decode_step(cfg: LMArchConfig, shape: ShapeConfig,
     )
 
 
+def build_prefill_chunk_step(cfg: LMArchConfig, shape: ShapeConfig,
+                             policy: PrecisionPolicy = AMP_BF16,
+                             chunk: int = 16) -> StepBundle:
+    """The serve engine's chunked-prefill step against a seq_len KV cache:
+    (B, chunk) pending prompt tokens with per-slot valid lengths.  This is
+    what a prefill-heavy serving tick lowers to — the dry-run records it
+    next to the one-token decode step so the roofline shows the
+    arithmetic-intensity win of chunking."""
+    if cfg.encoder_decoder:
+        raise ValueError("chunked prefill targets the decoder-only cache path")
+    B, S = shape.global_batch, shape.seq_len
+    p_shape = params_shape(cfg)
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, B, S,
+                           dtype=policy.at("serve/kv_cache").compute_dtype))
+
+    def chunk_step(params, cache, tokens, n_valid):
+        return lm_prefill_chunk(params, cache, tokens, n_valid, cfg, policy)
+
+    return StepBundle(
+        step_fn=chunk_step,
+        inputs={"cache": cache_shape,
+                "tokens": _sds((B, chunk), jnp.int32),
+                "n_valid": _sds((B,), jnp.int32)},
+        params_shape=p_shape,
+        extra_state_shape={},
+        description=f"prefill_chunk[{chunk}] {cfg.name} {shape.name} (KV len {S})",
+    )
+
+
 def build_step(cfg: LMArchConfig, shape: ShapeConfig,
                policy: PrecisionPolicy = AMP_BF16) -> StepBundle:
     if shape.kind == "train":
@@ -236,9 +267,12 @@ def bundle_shardings(bundle: StepBundle, cfg: LMArchConfig, mesh,
             mesh, opt_specs(bundle.extra_state_shape["opt_state"], param_specs))
         b_named = to_named(mesh, batch_specs(bundle.inputs["batch"], mesh))
         return (p_named, o_named, b_named), (p_named, o_named, scalar)
-    if "cache" in bundle.inputs:                     # decode step
+    if "cache" in bundle.inputs:                     # decode / prefill-chunk
         c_named = to_named(mesh, cache_specs(bundle.inputs["cache"], mesh, cfg))
         t_named = to_named(mesh, batch_specs(bundle.inputs["tokens"], mesh))
+        if "n_valid" in bundle.inputs:
+            n_named = to_named(mesh, batch_specs(bundle.inputs["n_valid"], mesh))
+            return (p_named, c_named, t_named, n_named), (None, c_named)
         return (p_named, c_named, t_named), (None, c_named)
     b_named = to_named(mesh, batch_specs(bundle.inputs["batch"], mesh))
     return (p_named, b_named), None                  # prefill

@@ -1,5 +1,5 @@
 """Model zoo: neural operators (paper) + the assigned LM architecture pool."""
-from .fno import FNOConfig, fno_apply, init_fno, param_count  # noqa: F401
-from .sfno import SFNOConfig, init_sfno, sfno_apply  # noqa: F401
+from .fno import FNOConfig, fno_apply, fno_infer, init_fno, param_count  # noqa: F401
+from .sfno import SFNOConfig, init_sfno, sfno_apply, sfno_infer  # noqa: F401
 from .gino import GINOConfig, gino_apply, init_gino  # noqa: F401
 from .unet import UNetConfig, init_unet, unet_apply  # noqa: F401

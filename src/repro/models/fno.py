@@ -191,5 +191,24 @@ def fno_apply(
     return jnp.moveaxis(h, -1, 1)
 
 
+def fno_infer(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: FNOConfig,
+    policy: PrecisionPolicy = FULL,
+) -> jnp.ndarray:
+    """Batched-inference entry point for serving.
+
+    x: (batch, in_channels, *spatial) -> (batch, out_channels, *spatial),
+    cast to the ``serve/operator`` site's transport dtype (f32 in the
+    base table).  Every op in the forward is per-sample independent
+    (batched GEMMs, FFTs, pointwise), so the operator engine's
+    micro-batching is bit-identical to serving each field alone under
+    the same precision policy.
+    """
+    y = fno_apply(params, x, cfg, policy)
+    return y.astype(policy.at("serve/operator").compute_dtype)
+
+
 def param_count(params) -> int:
     return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,6 +1,12 @@
 """Assigned LM-family architecture pool (decoder-only, MoE, SSM, hybrid,
 encoder-decoder audio, VLM) on a single scan-over-layers substrate."""
-from .common import blocked_attention, gqa_attention, plain_attention, rmsnorm  # noqa: F401
+from .common import (  # noqa: F401
+    blocked_attention,
+    chunk_attention,
+    gqa_attention,
+    plain_attention,
+    rmsnorm,
+)
 from .model import (  # noqa: F401
     FULL_WINDOW,
     init_cache,
@@ -8,6 +14,7 @@ from .model import (  # noqa: F401
     layer_windows,
     lm_decode_step,
     lm_forward,
+    lm_prefill_chunk,
 )
 from .moe import init_moe, moe_apply  # noqa: F401
 from .ssd import init_ssd, ssd_decode_step, ssd_forward  # noqa: F401

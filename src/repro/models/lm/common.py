@@ -157,13 +157,19 @@ def gqa_attention(
     return fn(q, k, v, q_pos, k_pos, window)
 
 
-def decode_attention(q, k_cache, v_cache, k_pos, q_pos, window) -> jnp.ndarray:
-    """One-token decode: q (B,H,1,D) vs cache (B,Hkv,S,D).
+def chunk_attention(q, k_cache, v_cache, k_pos, q_pos, window) -> jnp.ndarray:
+    """K-query cache attention: q (B,H,K,D) vs cache (B,Hkv,S,D).
 
-    k_pos: (B, S) per-slot cache positions (-1 => empty; supports ring-
-    buffer SWA caches), q_pos: (B,) per-slot current position (continuous
-    batching: every request tracks its own clock).  Linear in S — the
-    sub-quadratic serve path.
+    The serve-side generalisation of one-token decode to a *chunk* of K
+    queries (chunked batched prefill): every query row attends the same
+    cache, masked per-query by position.  k_pos: (B, S) per-slot cache
+    positions (-1 => empty; supports ring-buffer SWA caches), q_pos:
+    (B, K) per-query absolute positions (continuous batching: every
+    request tracks its own clock).  Linear in S per query.
+
+    With K=1 this is exactly the old ``decode_attention`` — the masked
+    columns contribute an exact 0.0 after ``exp``, so chunked and
+    token-by-token cache attention produce bit-identical rows.
     """
     Hq, Hkv = q.shape[1], k_cache.shape[1]
     if Hq != Hkv:
@@ -173,12 +179,19 @@ def decode_attention(q, k_cache, v_cache, k_pos, q_pos, window) -> jnp.ndarray:
     scale = 1.0 / (q.shape[-1] ** 0.5)
     s = jnp.einsum("bhqd,bhkd->bhqk", q, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    qp = q_pos[:, None]
-    valid = (k_pos >= 0) & (k_pos <= qp) & ((qp - k_pos) < window)  # (B, S)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    qp = q_pos[:, :, None]                                     # (B, K, 1)
+    kp = k_pos[:, None, :]                                     # (B, 1, S)
+    valid = (kp >= 0) & (kp <= qp) & ((qp - kp) < window)      # (B, K, S)
+    s = jnp.where(valid[:, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v_cache.dtype), v_cache,
                       preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, k_pos, q_pos, window) -> jnp.ndarray:
+    """One-token decode: q (B,H,1,D) vs cache; q_pos (B,) per-slot clocks.
+    The K=1 special case of :func:`chunk_attention`."""
+    return chunk_attention(q, k_cache, v_cache, k_pos, q_pos[:, None], window)
 
 
 def apply_rope_one(x: jnp.ndarray, pos: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
@@ -186,6 +199,19 @@ def apply_rope_one(x: jnp.ndarray, pos: jnp.ndarray, theta: float = 10000.0) -> 
     D = x.shape[-1]
     freqs = rope_freqs(D, theta)
     ang = pos[:, None, None].astype(jnp.float32) * freqs  # (B, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope_chunk(x: jnp.ndarray, pos: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """RoPE for a prefill chunk: x (B, H, K, D), pos (B, K) per-slot
+    absolute positions (continuous batching: slots sit at different
+    offsets, so positions can't be a shared (S,) range)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)
+    ang = pos[:, None, :, None].astype(jnp.float32) * freqs  # (B, 1, K, D/2)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)

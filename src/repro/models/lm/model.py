@@ -28,7 +28,9 @@ from repro.configs.base import LMArchConfig
 from repro.dist.constrain import constrain, constrain_bhsd, constrain_bsd
 from .common import (
     apply_rope,
+    apply_rope_chunk,
     apply_rope_one,
+    chunk_attention,
     decode_attention,
     gqa_attention,
     init_swiglu,
@@ -395,4 +397,183 @@ def lm_decode_step(
     logits = jnp.einsum("bd,vd->bv", h.astype(head_dtype), unembed.astype(head_dtype))
     new_cache = dict(new_xs)
     new_cache["step"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked batched prefill (serve prefill_chunk step)
+# ---------------------------------------------------------------------------
+
+
+def _attn_prefill_chunk(ap, h, layer_cache, q_pos, write_slot, window,
+                        cfg: LMArchConfig, dtype):
+    """h: (B, K, d) a chunk of K tokens per slot; writes the chunk's KVs
+    into the cache, then attends every chunk query against the updated
+    cache (write-then-attend).
+
+    Per-slot bookkeeping: q_pos (B, K) absolute positions, write_slot
+    (B, K) ring-buffer rows (== W for padding tokens, which the scatter
+    drops).  Masked cache columns contribute an exact 0.0 to the softmax,
+    so the chunk path is bit-identical to feeding the same tokens
+    one-per-tick through ``_attn_decode`` — as long as the chunk does not
+    wrap the ring buffer over positions still inside an in-chunk query's
+    window (the engine clamps SWA chunks accordingly).
+    """
+    B, K, d = h.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def proj(w, x):
+        return jnp.einsum("bkd,de->bke", x.astype(dtype), w.astype(dtype),
+                          preferred_element_type=jnp.float32).astype(dtype)
+
+    b_idx = jnp.arange(B)[:, None]                       # (B, 1)
+
+    if cfg.mla_kv_lora:
+        dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+        W = layer_cache["kv_pos"].shape[-1]
+        q = proj(ap["wq"], h).reshape(B, K, H, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope_chunk(q_rope.transpose(0, 2, 1, 3), q_pos,
+                                  cfg.rope_theta)
+        q = jnp.concatenate([q_nope.transpose(0, 2, 1, 3), q_rope], axis=-1)
+        c_kv = proj(ap["w_dkv"], h)                       # (B, K, r)
+        k_r = apply_rope_chunk(proj(ap["w_kr"], h)[:, None], q_pos,
+                               cfg.rope_theta)[:, 0]      # (B, K, dr)
+        ckv_cache = layer_cache["c_kv"].at[b_idx, write_slot].set(
+            c_kv.astype(layer_cache["c_kv"].dtype), mode="drop")
+        kr_cache = layer_cache["k_rope"].at[b_idx, write_slot].set(
+            k_r.astype(layer_cache["k_rope"].dtype), mode="drop")
+        kv_pos = layer_cache["kv_pos"].at[b_idx, write_slot].set(
+            q_pos, mode="drop")
+        k_n = jnp.einsum("bwr,re->bwe", ckv_cache.astype(dtype), ap["w_uk"].astype(dtype),
+                         preferred_element_type=jnp.float32).astype(dtype)
+        k_n = k_n.reshape(B, W, H, dn).transpose(0, 2, 1, 3)
+        k_full = jnp.concatenate(
+            [k_n, jnp.broadcast_to(kr_cache.astype(dtype)[:, None], (B, H, W, dr))], axis=-1
+        )
+        v_full = jnp.einsum("bwr,re->bwe", ckv_cache.astype(dtype), ap["w_uv"].astype(dtype),
+                            preferred_element_type=jnp.float32).astype(dtype)
+        v_full = v_full.reshape(B, W, H, dv).transpose(0, 2, 1, 3)
+        o = chunk_attention(q, k_full, v_full, kv_pos, q_pos, window)
+        o = o.transpose(0, 2, 1, 3).reshape(B, K, H * dv)
+        new = {"c_kv": ckv_cache, "k_rope": kr_cache, "kv_pos": kv_pos}
+    else:
+        q = proj(ap["wq"], h).reshape(B, K, H, hd).transpose(0, 2, 1, 3)
+        k = proj(ap["wk"], h).reshape(B, K, Hk, hd).transpose(0, 2, 1, 3)
+        v = proj(ap["wv"], h).reshape(B, K, Hk, hd)
+        q = apply_rope_chunk(q, q_pos, cfg.rope_theta)
+        k = apply_rope_chunk(k, q_pos, cfg.rope_theta).transpose(0, 2, 1, 3)  # (B,K,Hk,hd)
+        k_cache = layer_cache["k"].at[b_idx, :, write_slot].set(
+            k.astype(layer_cache["k"].dtype), mode="drop")
+        v_cache = layer_cache["v"].at[b_idx, :, write_slot].set(
+            v.astype(layer_cache["v"].dtype), mode="drop")
+        kv_pos = layer_cache["kv_pos"].at[b_idx, write_slot].set(
+            q_pos, mode="drop")
+        o = chunk_attention(q, k_cache.astype(dtype), v_cache.astype(dtype),
+                            kv_pos, q_pos, window)
+        o = o.transpose(0, 2, 1, 3).reshape(B, K, H * hd)
+        new = {"k": k_cache, "v": v_cache, "kv_pos": kv_pos}
+    out = jnp.einsum("bke,ed->bkd", o, ap["wo"].astype(dtype),
+                     preferred_element_type=jnp.float32).astype(dtype)
+    return out, new
+
+
+def _ssd_prefill_chunk(sp, h, state0, valid, cfg: LMArchConfig, policy):
+    """Scan the exact one-token SSD recurrence over the K chunk positions
+    (state updates masked for padding tokens) — bit-identical to feeding
+    the chunk token-by-token, which is the serve contract."""
+    def step(state, inp):
+        u_j, valid_j = inp                               # (B, d), (B,)
+        y_j, new_state = ssd_decode_step(sp, u_j, state, cfg, policy)
+        new_state = jnp.where(valid_j[:, None, None, None], new_state, state)
+        return new_state, y_j
+
+    state, ys = jax.lax.scan(
+        step, state0, (h.transpose(1, 0, 2), valid.transpose(1, 0)))
+    return ys.transpose(1, 0, 2), state                  # (B, K, d)
+
+
+def lm_prefill_chunk(
+    params: Dict,
+    cache: Dict,
+    tokens: jnp.ndarray,    # (B, K) next chunk of token ids per slot
+    n_valid: jnp.ndarray,   # (B,) valid prefix length per slot (0..K)
+    cfg: LMArchConfig,
+    policy: PrecisionPolicy = FULL,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One chunked-prefill serve step: consume up to K pending tokens per
+    slot in a single fused pass, writing their KVs / SSD state into the
+    cache, and return the logits at each slot's *last valid* token.
+
+    Returns (logits (B, V) f32, new cache).  Slots with ``n_valid == 0``
+    are untouched (no writes, clock unchanged); slots with ``n_valid == 1``
+    behave exactly like one ``lm_decode_step`` tick.  This is the serve
+    engine's throughput win: prompts cost ceil(len/K) ticks instead of
+    len ticks, and the K-token projections/FFNs run as one GEMM.
+    """
+    dtype = policy.at("lm/dense").compute_dtype
+    router_dtype = policy.at("lm/router").compute_dtype
+    head_dtype = policy.at("lm/proj_out").compute_dtype
+    B, K = tokens.shape
+    pos0 = cache["step"]                                  # (B,)
+    j = jnp.arange(K)
+    q_pos = pos0[:, None] + j[None, :]                    # (B, K)
+    valid = j[None, :] < n_valid[:, None]                 # (B, K)
+
+    h = params["embed"][tokens].astype(dtype)             # (B, K, d)
+    h = jnp.where(valid[..., None], h, 0)                 # padding rows inert
+    windows = layer_windows(cfg)
+
+    layer_cache_keys = [k for k in cache if k not in ("step",)]
+    xs_cache = {k: cache[k] for k in layer_cache_keys}
+    if "kv_pos" in cache:
+        W = cache["kv_pos"].shape[-1]
+        # ring row per chunk token; W (out of bounds) drops padding writes
+        write_slot = jnp.where(valid, jnp.mod(q_pos, W), W)
+    else:
+        write_slot = None
+
+    def block(h, layer_in):
+        lp, window, lc = layer_in
+        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        new_lc = dict(lc)
+        if cfg.mixer == "attn":
+            mix, upd = _attn_prefill_chunk(lp["attn"], hn, lc, q_pos,
+                                           write_slot, window, cfg, dtype)
+            new_lc.update(upd)
+        elif cfg.mixer == "ssd":
+            mix, new_state = _ssd_prefill_chunk(lp["ssd"], hn, lc["ssd_state"],
+                                                valid, cfg, policy)
+            new_lc["ssd_state"] = new_state
+        else:
+            a, upd = _attn_prefill_chunk(lp["attn"], hn, lc, q_pos,
+                                         write_slot, window, cfg, dtype)
+            s, new_state = _ssd_prefill_chunk(lp["ssd"], hn, lc["ssd_state"],
+                                              valid, cfg, policy)
+            mix = 0.5 * (a + s)
+            new_lc.update(upd)
+            new_lc["ssd_state"] = new_state
+        h = h + mix
+        hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if "ffn" in lp:
+            if cfg.moe_experts:
+                f, _ = moe_apply(lp["ffn"], hn.reshape(B * K, -1), cfg.moe_top_k,
+                                 cfg.capacity_factor, dtype,
+                                 router_dtype=router_dtype)
+                f = f.reshape(B, K, -1)
+            else:
+                f = swiglu(lp["ffn"], hn, dtype)
+            h = h + f
+        return h, new_lc
+
+    h, new_xs = jax.lax.scan(block, h, (params["layers"], windows, xs_cache))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    # only each slot's last valid position seeds generation
+    last = jnp.clip(n_valid - 1, 0, K - 1)
+    h_last = h[jnp.arange(B), last]                       # (B, d)
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", h_last.astype(head_dtype),
+                        unembed.astype(head_dtype))
+    new_cache = dict(new_xs)
+    new_cache["step"] = pos0 + n_valid
     return logits, new_cache

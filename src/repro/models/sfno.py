@@ -112,3 +112,13 @@ def sfno_apply(
     h = jax.nn.gelu(h)
     h = _linear(params["proj2"], h, policy.at("sfno/proj_out").compute_dtype)
     return jnp.moveaxis(h, -1, 1)
+
+
+def sfno_infer(
+    params: dict, x: jnp.ndarray, cfg: SFNOConfig, policy: PrecisionPolicy = FULL
+) -> jnp.ndarray:
+    """Batched-inference entry point for serving (see ``fno_infer``):
+    (B, in_channels, nlat, nlon) -> (B, out_channels, nlat, nlon) at the
+    ``serve/operator`` transport dtype."""
+    y = sfno_apply(params, x, cfg, policy)
+    return y.astype(policy.at("serve/operator").compute_dtype)

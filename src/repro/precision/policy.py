@@ -23,6 +23,8 @@ Canonical site vocabulary (patterns in the rule tables address these):
   ``<model>/proj_out``              output heads (f32 by default)
   ``lm/router``                     MoE router (f32 by default)
   ``serve/kv_cache``                KV-cache storage dtype
+  ``serve/sampler``                 sampling softmax/filter math (f32)
+  ``serve/operator``                operator-inference transport dtype
   ``train/loss_scale``              dynamic-loss-scaling switch
   ``params``                        master weight storage
 """
@@ -299,6 +301,8 @@ CANONICAL_SITES = (
     "model/proj_out",
     "lm/router",
     "serve/kv_cache",
+    "serve/sampler",
+    "serve/operator",
     "train/loss_scale",
 )
 

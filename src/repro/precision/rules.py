@@ -90,6 +90,11 @@ DEFAULT_RULES: Tuple[Entry, ...] = (
     ("params", SiteRule(compute=jnp.float32)),
     ("*/router", SiteRule(compute=jnp.float32)),
     ("*/proj_out", SiteRule(compute=jnp.float32)),
+    # serving: the sampler's softmax/filtering math is a reduction over
+    # the vocab (AMP-blocklist treatment), and operator-inference outputs
+    # transport at f32 regardless of the compute rule set.
+    ("serve/sampler", SiteRule(compute=jnp.float32)),
+    ("serve/operator", SiteRule(compute=jnp.float32)),
     ("train/loss_scale", SiteRule(loss_scaling=False)),
     (
         "*",

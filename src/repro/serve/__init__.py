@@ -1,1 +1,19 @@
-from .engine import Request, ServeEngine  # noqa: F401
+"""repro.serve — the Engine serving API.
+
+One protocol (``submit / tick / drain / stats``) over two engines:
+:class:`LMEngine` (continuous-batching LM decode with chunked batched
+prefill and per-request sampling) and :class:`OperatorEngine`
+(micro-batched FNO/SFNO field inference in resolution buckets), both
+fed by a shared :class:`Scheduler` (FCFS / shortest-prompt-first with
+capacity rejection).  ``ServeEngine`` is the pre-v2 alias of
+``LMEngine``.
+"""
+from .engine import Engine, EngineBase, LMEngine, Request, ServeEngine  # noqa: F401
+from .operator import FieldRequest, OperatorEngine  # noqa: F401
+from .sampler import (  # noqa: F401
+    GREEDY,
+    SamplingParams,
+    request_key,
+    sample_token,
+)
+from .scheduler import POLICIES, Scheduler  # noqa: F401

@@ -1,22 +1,36 @@
-"""Batched serving engine: slot-based continuous batching over the
-unified LM decode step.
+"""Engine API: one serving protocol over heterogeneous workloads.
 
-A fixed pool of B slots holds independent requests; each engine tick runs
-one fused ``lm_decode_step`` for the whole pool (one token per active
-slot).  Finished/empty slots keep decoding padding (masked out) — the
-standard static-shape trick that keeps the step jit-stable while requests
-arrive and depart (continuous batching).  Prefill is chunked through
-``lm_forward`` and its final hidden state seeds the slot's KV cache via
-teacher-forced decode of the prompt (simple, correct; a fused prefill
-kernel is a perf-pass item, §Perf).
+Every engine — the LM slot engine here, the FNO/SFNO field engine in
+``operator.py`` — speaks the same four verbs:
 
-This engine is what the decode_32k / long_500k dry-run cells lower: one
-``serve_step`` with a KV cache of seq_len.
+    submit(req) -> bool     queue a request (capacity-rejected => failed)
+    tick()                  one fused device step
+    drain(max_ticks)        tick until idle; returns finished requests
+    stats()                 tokens/s or fields/s, slot occupancy, queue
+
+``LMEngine`` is the renamed, slimmed ``ServeEngine``: a fixed pool of B
+slots over the unified LM decode step (continuous batching), now with
+
+  * a :class:`~repro.serve.scheduler.Scheduler` owning admission (FCFS /
+    shortest-prompt-first) and ``max_len`` capacity checks — oversized
+    requests fail at submit instead of overrunning the KV cache or
+    spinning ``drain`` forever;
+  * chunked batched prefill: up to ``prefill_chunk`` pending prompt
+    tokens per slot are consumed per tick through one fused
+    ``lm_prefill_chunk`` step (prompts cost ceil(len/K) ticks instead of
+    len ticks — the headline throughput win, benchmarked in
+    ``benchmarks/bench_serve.py``);
+  * per-request sampling (greedy / temperature / top-k / top-p) with
+    explicit jax PRNG keys through the ``serve/sampler`` precision site.
+
+Pure-decode ticks still run the one-token ``lm_decode_step`` — byte-for-
+byte the old engine's step — so chunking only touches the prefill phase.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import time
+from typing import Any, Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -25,19 +39,124 @@ import numpy as np
 from repro.core import PrecisionPolicy, FULL
 from repro.configs.base import LMArchConfig
 from repro.dist import use_mesh
-from repro.models.lm import init_cache, lm_decode_step
+from repro.models.lm import init_cache, lm_decode_step, lm_prefill_chunk
+
+from .sampler import GREEDY, SamplingParams, request_key, sample_token
+from .scheduler import Scheduler
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
+    """One LM generation request.  Identity semantics (``eq=False``):
+    two requests are never "the same work item" just because their
+    fields match."""
+
     uid: int
     prompt: List[int]
     max_new_tokens: int = 16
+    sampling: SamplingParams = GREEDY
     generated: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+    status: str = "new"          # new | queued | running | done | failed
+    error: Optional[str] = None
+    submit_tick: int = -1
+    start_tick: int = -1
+    finish_tick: int = -1
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
 
 
-class ServeEngine:
+@runtime_checkable
+class Engine(Protocol):
+    """The engine-agnostic serving protocol (LM and operator engines)."""
+
+    def submit(self, req) -> bool: ...
+    def tick(self) -> None: ...
+    def drain(self, max_ticks: int = 10_000) -> Tuple[List[Any], int]: ...
+    def stats(self) -> Dict[str, Any]: ...
+
+
+class EngineBase:
+    """Shared slot bookkeeping + drain loop + stats scaffolding."""
+
+    kind = "engine"
+
+    def __init__(self, scheduler: Scheduler, n_slots: int):
+        self.scheduler = scheduler
+        self.n_slots = n_slots
+        self._ticks = 0
+        self._wall_s = 0.0
+        self._occupancy_sum = 0.0
+        self._n_done = 0
+        self._n_failed = 0
+
+    # subclasses implement one device step over the current slots
+    def _tick_impl(self) -> List[Any]:
+        raise NotImplementedError
+
+    def _busy(self) -> bool:
+        raise NotImplementedError
+
+    def submit(self, req) -> bool:
+        ok = self.scheduler.submit(req, self._ticks)
+        if not ok:
+            self._n_failed += 1
+        return ok
+
+    def tick(self) -> List[Any]:
+        """One engine step.  Returns the requests finished this tick."""
+        t0 = time.perf_counter()
+        finished = self._tick_impl()
+        self._wall_s += time.perf_counter() - t0
+        self._ticks += 1
+        for r in finished:
+            r.finish_tick = self._ticks
+            r.status = "done"
+            self._n_done += 1
+        return finished
+
+    def drain(self, max_ticks: int = 10_000) -> Tuple[List[Any], int]:
+        """Tick until every submitted request is finished (or max_ticks).
+
+        Capacity-rejected requests come back *failed* rather than
+        burning ticks — the old engine span ``max_ticks`` admitting
+        nothing when a request could never fit.
+        """
+        finished: List[Any] = list(self.scheduler.take_failed())
+        ticks = 0
+        while (self.scheduler.depth or self._busy()) and ticks < max_ticks:
+            finished.extend(self.tick())
+            ticks += 1
+        finished.extend(self.scheduler.take_failed())
+        return finished, ticks
+
+    def stats(self) -> Dict[str, Any]:
+        denom = max(self._ticks, 1)
+        return {
+            "engine": self.kind,
+            "ticks": self._ticks,
+            "wall_s": round(self._wall_s, 6),
+            "n_slots": self.n_slots,
+            "slot_occupancy": round(self._occupancy_sum / denom, 4),
+            "completed": self._n_done,
+            "failed": self._n_failed,
+            "queue": self.scheduler.stats(),
+            **self._extra_stats(),
+        }
+
+    def _extra_stats(self) -> Dict[str, Any]:
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# LM engine
+# ---------------------------------------------------------------------------
+
+
+class LMEngine(EngineBase):
+    kind = "lm"
+
     def __init__(
         self,
         params,
@@ -45,16 +164,36 @@ class ServeEngine:
         n_slots: int = 4,
         max_len: int = 512,
         policy: PrecisionPolicy = FULL,
-        greedy: bool = True,
         mesh=None,
+        scheduler: str = "fcfs",
+        prefill_chunk: Optional[int] = None,
+        seed: int = 0,
     ):
+        if prefill_chunk is None:
+            # MoE expert-capacity dispatch depends on the dispatch-batch
+            # composition (moe_apply drops over-capacity tokens), so a
+            # K-token chunk routes differently than token-by-token.  The
+            # default contract is exactness: MoE archs prefill one token
+            # per tick unless the caller opts into chunking explicitly.
+            prefill_chunk = 1 if cfg.moe_experts else 8
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        super().__init__(
+            Scheduler(
+                scheduler,
+                capacity_check=self._capacity_check,
+                cost=lambda r: len(r.prompt),
+            ),
+            n_slots,
+        )
         self.params = params
         self.cfg = cfg
         self.policy = policy
-        self.n_slots = n_slots
         self.max_len = max_len
-        self.greedy = greedy
         self.mesh = mesh
+        self.prefill_chunk = prefill_chunk
+        self._base_key = jax.random.PRNGKey(seed)
+        self._sampler_site = policy.at("serve/sampler")
         # KV storage dtype comes from the serve/kv_cache site of the rule
         # table (f32 under `full` for an exact decode contract; bf16/fp16
         # under the AMP rule sets for the memory saving).
@@ -62,9 +201,24 @@ class ServeEngine:
                                 dtype=policy.at("serve/kv_cache").compute_dtype)
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.slot_pending: List[List[int]] = [[] for _ in range(n_slots)]
-        step_fn = lambda p, c, t: lm_decode_step(p, c, t, cfg, policy)
+        self.slot_pos: List[int] = [0] * n_slots   # host mirror of cache step
+        # SWA archs keep a ring cache narrower than max_len: a chunk must
+        # never wrap rows still inside an in-chunk query's window, so the
+        # per-slot chunk is clamped to the remaining un-wrapped rows.
+        if cfg.mixer in ("attn", "hymba") and cfg.attn_window > 0:
+            self._ring = min(max_len, cfg.attn_window)
+        else:
+            self._ring = None
+        self._n_prompt_tokens = 0
+        self._n_generated = 0
+        self._prefill_ticks = 0
+        self._decode_ticks = 0
+
+        decode_fn = lambda p, c, t: lm_decode_step(p, c, t, cfg, policy)
+        chunk_fn = lambda p, c, t, n: lm_prefill_chunk(p, c, t, n, cfg, policy)
         if mesh is None:
-            self._step = jax.jit(step_fn)
+            self._decode = jax.jit(decode_fn)
+            self._chunk = jax.jit(chunk_fn)
         else:
             # shard the serving state through the same rule tables the
             # dry-run lowers with: params by lm_param_specs, the slot
@@ -84,15 +238,36 @@ class ServeEngine:
             t_named = to_named(
                 mesh,
                 batch_specs(jax.ShapeDtypeStruct((n_slots,), jnp.int32), mesh))
+            t2_named = to_named(
+                mesh,
+                batch_specs(
+                    jax.ShapeDtypeStruct((n_slots, prefill_chunk), jnp.int32),
+                    mesh))
+            logits_sh = NamedSharding(mesh, P())
             self.params = jax.device_put(params, p_named)
             self.cache = jax.device_put(self.cache, c_named)
-            self._step = jax.jit(
-                step_fn,
+            self._decode = jax.jit(
+                decode_fn,
                 in_shardings=(p_named, c_named, t_named),
-                out_shardings=(NamedSharding(mesh, P()), c_named),
+                out_shardings=(logits_sh, c_named),
+            )
+            self._chunk = jax.jit(
+                chunk_fn,
+                in_shardings=(p_named, c_named, t2_named, t_named),
+                out_shardings=(logits_sh, c_named),
             )
 
-    # -- admission -----------------------------------------------------------
+    # -- admission -------------------------------------------------------------
+    def _capacity_check(self, req: Request) -> Tuple[bool, str]:
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.max_len:
+            return False, (
+                f"request needs {need} cache rows "
+                f"(prompt {len(req.prompt)} + max_new_tokens "
+                f"{req.max_new_tokens}) but max_len is {self.max_len}"
+            )
+        return True, ""
+
     def _reset_slot(self, i: int):
         """Zero slot i's clock and invalidate its cache rows (continuous
         batching: other slots keep decoding undisturbed)."""
@@ -103,26 +278,108 @@ class ServeEngine:
         if "ssd_state" in c:
             c["ssd_state"] = c["ssd_state"].at[:, i].set(0.0)
         self.cache = c
+        self.slot_pos[i] = 0
 
-    def admit(self, req: Request) -> bool:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                self.slots[i] = req
-                self._reset_slot(i)
-                # feed the prompt token-by-token (teacher forcing) then decode
-                self.slot_pending[i] = list(req.prompt)
-                return True
-        return False
+    def _assign_slots(self):
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return
+        for i, req in zip(free, self.scheduler.take(len(free), self._ticks)):
+            self.slots[i] = req
+            self._reset_slot(i)
+            # empty prompts decode from token 0, like the old engine
+            self.slot_pending[i] = list(req.prompt) or [0]
+
+    # -- sampling --------------------------------------------------------------
+    def _next_token(self, req: Request, logits_row) -> int:
+        if req.sampling.temperature <= 0.0:
+            # greedy hot path: the row is already a materialised f32
+            # numpy array — argmax needs no device dispatch (and is
+            # invariant under the sampler site's monotone cast)
+            return int(np.argmax(logits_row))
+        key = request_key(self._base_key, req.uid, len(req.generated))
+        return sample_token(logits_row, req.sampling, key,
+                            site=self._sampler_site)
+
+    def _finish_or_continue(self, i: int, req: Request, finished: List[Request]):
+        if len(req.generated) >= req.max_new_tokens:
+            finished.append(req)
+            self.slots[i] = None  # free the slot (continuous batching)
 
     # -- one engine tick -------------------------------------------------------
-    def tick(self):
-        """Run one fused decode step for the slot pool.
+    def _busy(self) -> bool:
+        return any(s is not None for s in self.slots)
 
-        The step that consumes a slot's *last* pending prompt token is also
-        the step whose logits define the first generated token — discarding
-        them (and re-feeding ``prompt[-1]`` next tick) would decode from a
-        skewed cache position, desynchronising the engine from a
-        straight-line ``lm_forward`` greedy decode.
+    def _tick_impl(self) -> List[Request]:
+        self._assign_slots()
+        self._occupancy_sum += (
+            sum(s is not None for s in self.slots) / self.n_slots)
+        prefilling = any(
+            self.slots[i] is not None and len(self.slot_pending[i]) > 0
+            for i in range(self.n_slots)
+        )
+        if prefilling and self.prefill_chunk > 1:
+            return self._tick_chunk()
+        return self._tick_decode()
+
+    def _chunk_limit(self, i: int) -> int:
+        """Largest safe chunk for slot i (ring-buffer wrap guard)."""
+        if self._ring is None:
+            return self.prefill_chunk
+        return max(1, min(self.prefill_chunk, self._ring - self.slot_pos[i]))
+
+    def _tick_chunk(self) -> List[Request]:
+        """Chunked prefill tick: consume up to K pending prompt tokens per
+        prefilling slot; decoding slots ride along as 1-valid-token rows.
+        The step that consumes a slot's last prompt token also emits its
+        first generated token (the logits are not discarded)."""
+        K = self.prefill_chunk
+        tokens = np.zeros((self.n_slots, K), np.int32)
+        n_valid = np.zeros((self.n_slots,), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self.slot_pending[i]:
+                k = min(len(self.slot_pending[i]), self._chunk_limit(i))
+                tokens[i, :k] = self.slot_pending[i][:k]
+                n_valid[i] = k
+            else:
+                tokens[i, 0] = req.generated[-1]
+                n_valid[i] = 1
+        with use_mesh(self.mesh):
+            logits, self.cache = self._chunk(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(n_valid))
+        logits = np.asarray(logits)
+        self._prefill_ticks += 1
+        finished: List[Request] = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            k = int(n_valid[i])
+            if self.slot_pending[i]:
+                del self.slot_pending[i][:k]
+                self.slot_pos[i] += k
+                self._n_prompt_tokens += k
+                if self.slot_pending[i]:
+                    continue  # still prefilling this slot
+            else:
+                self.slot_pos[i] += 1
+            req.generated.append(self._next_token(req, logits[i]))
+            self._n_generated += 1
+            self._finish_or_continue(i, req, finished)
+        return finished
+
+    def _tick_decode(self) -> List[Request]:
+        """One fused one-token decode step for the slot pool (also the
+        prefill path at ``prefill_chunk=1``: teacher-forced token-by-token,
+        exactly the old engine).
+
+        The step that consumes a slot's *last* pending prompt token is
+        also the step whose logits define the first generated token —
+        discarding them (and re-feeding ``prompt[-1]`` next tick) would
+        decode from a skewed cache position, desynchronising the engine
+        from a straight-line ``lm_forward`` greedy decode.
         """
         tokens = np.zeros((self.n_slots,), np.int32)
         for i, req in enumerate(self.slots):
@@ -130,38 +387,52 @@ class ServeEngine:
                 continue
             if self.slot_pending[i]:
                 tokens[i] = self.slot_pending[i][0]
-            elif req.generated:
-                tokens[i] = req.generated[-1]
             else:
-                # empty-prompt request: decode from token 0
-                tokens[i] = 0
+                tokens[i] = req.generated[-1]
         with use_mesh(self.mesh):
-            logits, self.cache = self._step(self.params, self.cache,
-                                            jnp.asarray(tokens))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens))
+        logits = np.asarray(logits)
+        self._decode_ticks += 1
+        finished: List[Request] = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
+            self.slot_pos[i] += 1
             if self.slot_pending[i]:
                 self.slot_pending[i].pop(0)
+                self._n_prompt_tokens += 1
                 if self.slot_pending[i]:
                     continue  # still prefilling this slot
                 # fall through: the prompt is consumed and this step's
                 # logits are the first generation
-            req.generated.append(int(nxt[i]))
-            if len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                self.slots[i] = None  # free the slot (continuous batching)
+            req.generated.append(self._next_token(req, logits[i]))
+            self._n_generated += 1
+            self._finish_or_continue(i, req, finished)
+        return finished
 
-    def run_until_done(self, requests: List[Request], max_ticks: int = 10_000):
-        queue = list(requests)
-        done: List[Request] = []
-        ticks = 0
-        while (queue or any(self.slots)) and ticks < max_ticks:
-            while queue and self.admit(queue[0]):
-                queue.pop(0)
-            inflight = [r for r in self.slots if r is not None]
-            self.tick()
-            done.extend(r for r in inflight if r.done)
-            ticks += 1
-        return done, ticks
+    # -- back-compat driver ----------------------------------------------------
+    def run_until_done(self, requests: List[Request],
+                       max_ticks: int = 10_000) -> Tuple[List[Request], int]:
+        """Submit ``requests`` and drain.  Returns (finished, ticks);
+        capacity-rejected requests come back with ``status='failed'``
+        instead of spinning the loop until ``max_ticks``."""
+        for r in requests:
+            self.submit(r)
+        return self.drain(max_ticks)
+
+    def _extra_stats(self) -> Dict[str, Any]:
+        processed = self._n_prompt_tokens + self._n_generated
+        return {
+            "prefill_chunk": self.prefill_chunk,
+            "prefill_ticks": self._prefill_ticks,
+            "decode_ticks": self._decode_ticks,
+            "prompt_tokens": self._n_prompt_tokens,
+            "tokens_generated": self._n_generated,
+            "tokens_per_s": round(processed / self._wall_s, 2)
+            if self._wall_s else None,
+        }
+
+
+#: Back-compat alias — PRs 0-2 called the slot engine ``ServeEngine``.
+ServeEngine = LMEngine

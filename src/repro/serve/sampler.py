@@ -1,0 +1,103 @@
+"""Sampling API for the serve engines: greedy / temperature / top-k /
+top-p with per-request parameters and explicit jax PRNG keys.
+
+Sampling is a *precision site* like everything else in the serving
+stack: the engine resolves ``serve/sampler`` through the rule table and
+hands the resolved :class:`~repro.precision.SitePrecision` in, so the
+softmax/filtering math runs at a declared format (pinned f32 in the
+shared base table — the AMP-blocklist treatment reductions get
+everywhere else in this repo) instead of inheriting whatever dtype the
+logits happened to arrive in.
+
+Determinism contract: ``sample_token`` is a pure function of
+``(logits, params, key)``.  The engine derives per-request keys with
+``request_key`` (fold uid, then the generation index), so a fixed engine
+seed replays identical samples regardless of slot assignment or tick
+interleaving — the property the continuous-batching tests pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs.
+
+    temperature: 0 (or negative) => greedy argmax; PRNG key unused.
+    top_k:       keep only the k highest logits (0 => off).
+    top_p:       nucleus sampling — keep the smallest prefix of the
+                 descending-probability ordering with cumulative mass
+                 >= top_p (1.0 => off).  Always keeps at least the
+                 argmax, so top_p -> 0 degrades to greedy.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+GREEDY = SamplingParams()
+
+
+def apply_top_k(logits: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Mask everything below the k-th largest logit to -inf."""
+    kth = jax.lax.top_k(logits, min(k, logits.shape[-1]))[0][..., -1:]
+    return jnp.where(logits < kth, -jnp.inf, logits)
+
+
+def apply_top_p(logits: jnp.ndarray, p: float) -> jnp.ndarray:
+    """Nucleus filter: keep the minimal descending-probability prefix
+    whose cumulative mass reaches ``p`` (the head token always stays)."""
+    order = jnp.argsort(-logits)
+    sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # token i is kept while the mass *before* it is < p
+    keep_sorted = (cum - probs) < p
+    keep = jnp.zeros_like(keep_sorted).at[order].set(keep_sorted)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
+def sample_token(
+    logits: jnp.ndarray,
+    params: SamplingParams = GREEDY,
+    key: Optional[jax.Array] = None,
+    site=None,
+) -> int:
+    """Draw one token id from a (V,) logits row.
+
+    ``site`` is the resolved ``serve/sampler`` SitePrecision (f32 in the
+    base table); the filtering/softmax math runs at its compute dtype.
+    Greedy requests never touch the PRNG key, so greedy streams are
+    reproducible without seed plumbing.
+    """
+    logits = jnp.asarray(logits)
+    if site is not None:
+        logits = logits.astype(site.compute_dtype)
+    if params.temperature <= 0.0:
+        return int(jnp.argmax(logits, axis=-1))
+    if key is None:
+        raise ValueError("non-greedy sampling requires an explicit PRNG key")
+    logits = logits / params.temperature
+    if params.top_k:
+        logits = apply_top_k(logits, params.top_k)
+    if params.top_p < 1.0:
+        logits = apply_top_p(logits, params.top_p)
+    return int(jax.random.categorical(key, logits))
+
+
+def request_key(base_key: jax.Array, uid: int, step: int) -> jax.Array:
+    """The per-(request, generation-index) key: stable under slot
+    reassignment and tick interleaving."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, uid), step)

@@ -10,7 +10,7 @@ from repro.dist.sharding import batch_specs, lm_param_specs, pick_spec, replicat
 from repro.launch.steps import build_step, params_shape
 from repro.configs.base import SHAPES, cell_is_runnable
 from repro.models.lm import init_lm
-from repro.serve import Request, ServeEngine
+from repro.serve import LMEngine, Request, ServeEngine
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -86,10 +86,14 @@ class TestShardingRules:
 
 
 class TestServeEngine:
+    def test_serve_engine_is_lm_engine(self):
+        """Back-compat: the pre-v2 name resolves to the v2 engine."""
+        assert ServeEngine is LMEngine
+
     def test_serves_all_requests(self):
         cfg = get_config("smollm-360m", smoke=True)
         params = init_lm(jax.random.PRNGKey(0), cfg)
-        engine = ServeEngine(params, cfg, n_slots=2, max_len=32)
+        engine = LMEngine(params, cfg, n_slots=2, max_len=32)
         reqs = [Request(uid=i, prompt=[1, 2, 3], max_new_tokens=4) for i in range(5)]
         done, ticks = engine.run_until_done(reqs)
         assert len(done) == 5
@@ -102,10 +106,10 @@ class TestServeEngine:
         params = init_lm(jax.random.PRNGKey(1), cfg)
         prompt = [5, 7, 9]
 
-        solo = ServeEngine(params, cfg, n_slots=1, max_len=32)
+        solo = LMEngine(params, cfg, n_slots=1, max_len=32)
         (d1,), _ = solo.run_until_done([Request(uid=0, prompt=prompt, max_new_tokens=4)])
 
-        crowded = ServeEngine(params, cfg, n_slots=1, max_len=32)
+        crowded = LMEngine(params, cfg, n_slots=1, max_len=32)
         reqs = [Request(uid=0, prompt=[2, 4], max_new_tokens=3),
                 Request(uid=1, prompt=prompt, max_new_tokens=4)]
         done, _ = crowded.run_until_done(reqs)
@@ -115,7 +119,7 @@ class TestServeEngine:
     def test_ssm_engine(self):
         cfg = get_config("mamba2-370m", smoke=True)
         params = init_lm(jax.random.PRNGKey(2), cfg)
-        engine = ServeEngine(params, cfg, n_slots=2, max_len=32)
+        engine = LMEngine(params, cfg, n_slots=2, max_len=32)
         done, _ = engine.run_until_done(
             [Request(uid=0, prompt=[1, 2], max_new_tokens=3)])
         assert len(done) == 1 and len(done[0].generated) == 3
@@ -141,7 +145,7 @@ class TestServeEngine:
             ref.append(nxt)
             toks.append(nxt)
 
-        engine = ServeEngine(params, cfg, n_slots=1, max_len=64)
+        engine = LMEngine(params, cfg, n_slots=1, max_len=64)
         done, _ = engine.run_until_done(
             [Request(uid=0, prompt=prompt, max_new_tokens=n_new)])
         assert done[0].generated == ref
