@@ -26,6 +26,11 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--n", type=int, default=32)
     ap.add_argument("--half", default="bf16", choices=["bf16", "fp16"])
+    ap.add_argument("--auto-precision", action="store_true",
+                    help="replace the static 25/50/25 schedule with the "
+                         "telemetry-driven controller: per-site formats "
+                         "follow runtime amax/overflow counters plus the "
+                         "Thm 3.1/3.2 budgets")
     args = ap.parse_args()
 
     print("generating Darcy data (CG solver)...")
@@ -47,19 +52,43 @@ def main():
         return {"a": a_tr[idx], "u": u_tr[idx]}
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
+        if args.auto_precision:
+            # auto mode: telemetry taps measure per-site numerics inside
+            # the jitted step; the controller demotes spectral sites only
+            # while the Thm 3.2 budget stays inside the discretisation
+            # error at this grid, and promotes back on overflow streaks
+            from repro.autoprec import AutoPrecisionController
+
+            autoprec = AutoPrecisionController(
+                base="full", grid_points=args.n ** 2, interval=5)
+            schedule = PrecisionSchedule.auto("full", grid_points=args.n ** 2)
+        else:
+            autoprec = None
+            schedule = PrecisionSchedule.paper_default(args.half)
         tcfg = TrainerConfig(
             total_steps=args.steps,
-            schedule=PrecisionSchedule.paper_default(args.half),
+            schedule=schedule, autoprec=autoprec,
             optimizer=AdamW(lr=2e-3, weight_decay=1e-5),
             ckpt_dir=ckpt_dir, ckpt_every=20,
         )
         trainer = Trainer(loss_fn, params, tcfg)
         trainer.install_preemption_handler()
-        print(f"training {args.steps} steps with the paper schedule "
-              f"(25% mixed / 50% AMP / 25% full, half={args.half})...")
+        if args.auto_precision:
+            print(f"training {args.steps} steps with bound-guided "
+                  f"auto-precision (base=full)...")
+        else:
+            print(f"training {args.steps} steps with the paper schedule "
+                  f"(25% mixed / 50% AMP / 25% full, half={args.half})...")
         hist = trainer.run(batch_fn)
         for h in hist[:: max(1, len(hist) // 8)]:
             print(f"  step {h['step']:4d} policy={h['policy']:<16s} loss={h['loss']:.4f}")
+        if trainer.controller is not None:
+            decisions = trainer.controller.describe()
+            print("auto-precision decisions:",
+                  {g: s["fmt"] for g, s in decisions["sites"].items()})
+            counters = trainer.telemetry.counters()
+            print(f"telemetry: {counters['steps']} steps, "
+                  f"overflows={counters['overflow_total']:.0f}")
 
         # restart check
         t2 = Trainer(loss_fn, params, tcfg)

@@ -1,0 +1,35 @@
+"""repro.autoprec — runtime numerics telemetry + bound-guided adaptive
+precision control.
+
+The third leg after ``repro.dist`` and ``repro.precision``: where the
+rule tables say *which format runs where*, autoprec **measures** what
+actually flows through each site at runtime (amax, exponent histograms,
+overflow/underflow counters, measured quantisation error — collected
+inside jitted steps as a functional carry) and **decides** which sites
+can run below fp32, demoting only while the observed range plus the
+Thm 3.1/3.2 budgets stay within a target fraction of the discretisation
+error and promoting back on overflow streaks.
+
+Public API:
+  tap / TraceCollector / collecting     — trace-time site taps
+  SiteStats / SiteWindow / TelemetryAggregator — carry + host aggregation
+  telemetry_active / merge_stacked / fmt_of    — integration helpers
+  AutoPrecisionController / ControllerConfig   — telemetry -> rule overlays
+  certify (submodule)                    — empirical bound certification
+"""
+from .telemetry import (  # noqa: F401
+    SiteStats,
+    SiteWindow,
+    TelemetryAggregator,
+    TraceCollector,
+    collecting,
+    fmt_of,
+    merge_stacked,
+    tap,
+    telemetry_active,
+)
+from .controller import (  # noqa: F401
+    AutoPrecisionController,
+    ControllerConfig,
+    group_of,
+)

@@ -54,6 +54,17 @@ FORMAT_MAX = {
     "fp8_e5m2": 57344.0,
 }
 
+# Smallest normal magnitude per format — the underflow threshold the
+# telemetry taps and the autoprec controller's candidate checks use.
+FORMAT_TINY = {
+    "float64": 2.2250738585072014e-308,
+    "float32": 1.1754944e-38,
+    "bfloat16": 1.1754944e-38,
+    "float16": 6.103515625e-05,
+    "fp8_e4m3": 2.0 ** -6,
+    "fp8_e5m2": 2.0 ** -14,
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionSystem:
@@ -84,14 +95,7 @@ def precision_system_for(fmt: str) -> PrecisionSystem:
     """Build an (a0, eps, T)-system approximating a named float format."""
     eps = FORMAT_EPS[fmt]
     vmax = FORMAT_MAX.get(fmt, 3.4e38)
-    # smallest normal, roughly
-    a0 = {
-        "float32": 1.18e-38,
-        "bfloat16": 1.18e-38,
-        "float16": 6.1e-5,
-        "fp8_e4m3": 2.0 ** -6,
-        "fp8_e5m2": 2.0 ** -14,
-    }.get(fmt, 1e-30)
+    a0 = FORMAT_TINY.get(fmt, 1e-30)  # smallest normal
     T = int(math.log(vmax / a0) / math.log1p(eps))
     return PrecisionSystem(a0=a0, eps=eps, T=T)
 

@@ -23,7 +23,7 @@ distinct names so the trainer's step cache keys correctly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple, Union
+from typing import Optional, Tuple, Union
 
 from repro.precision import PrecisionPolicy, get_policy
 from repro.precision.rules import normalize_entries
@@ -42,8 +42,20 @@ class PrecisionSchedule:
 
     phases: Tuple[Tuple[float, Overlay], ...]
     base: str = "full"
+    #: ``"static"`` = the piecewise-constant phases above; ``"auto"`` =
+    #: the trainer supersedes the phases with an
+    #: ``repro.autoprec.AutoPrecisionController`` over ``base`` — per-site
+    #: formats follow runtime telemetry and the Thm 3.1/3.2 budgets.
+    mode: str = "static"
+    #: Auto mode only: the physical grid size n the Thm 3.1 budget is
+    #: evaluated at.  Set it to the training resolution (e.g. 64*64) —
+    #: the trainer cannot infer it from an opaque loss_fn, and the
+    #: controller's fallback default assumes a 64^d grid.
+    grid_points: Optional[int] = None
 
     def __post_init__(self):
+        if self.mode not in ("static", "auto"):
+            raise ValueError(f"mode must be 'static' or 'auto', got {self.mode!r}")
         ends = [e for e, _ in self.phases]
         if sorted(ends) != ends or ends[-1] != 1.0:
             raise ValueError(f"phase ends must increase to 1.0, got {ends}")
@@ -86,3 +98,16 @@ class PrecisionSchedule:
     @classmethod
     def constant(cls, name: str) -> "PrecisionSchedule":
         return cls(phases=((1.0, name),))
+
+    @classmethod
+    def auto(cls, base: str = "full",
+             grid_points: Optional[int] = None) -> "PrecisionSchedule":
+        """Auto-precision mode: instead of the paper's fixed 25/50/25
+        phases, the trainer measures per-site numerics at runtime and
+        lets a controller demote/promote sites against the theory
+        budgets.  Pass ``grid_points`` (the training resolution, e.g.
+        ``64 * 64``) so the Thm 3.1 budget is evaluated at the real
+        grid.  Standalone consumers (``policy_at`` outside a trainer)
+        see the base policy."""
+        return cls(phases=((1.0, base),), base=base, mode="auto",
+                   grid_points=grid_points)

@@ -252,6 +252,9 @@ def spectral_conv_apply(
 
     # 3. inverse FFT back to physical space
     y = jnp.fft.irfftn(out_f, s=spatial, axes=tuple(range(2, 2 + ndim)))
+    from repro.autoprec.telemetry import fmt_of, tap
+
+    tap(f"{site}/fft_out", y, fmt=fmt_of(fft_out))
     if fft_out.spectral_is_half:
         # iFFT output also lives at half precision in the paper's pipeline
         y = y.astype(fft_out.compute_dtype)

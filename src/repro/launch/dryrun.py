@@ -40,7 +40,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              policy_name: str = "amp_bf16", verbose: bool = True,
-             prefill_chunk: int = 0) -> dict:
+             prefill_chunk: int = 0, telemetry: bool = False) -> dict:
     from repro.core import get_policy
     from repro.precision import describe
 
@@ -119,6 +119,27 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "useful_flops_ratio": (mf / global_flops) if global_flops else None,
         "replication": replication_report(bundle.params_shape, param_specs),
     })
+    if shape.kind == "train" and telemetry:
+        # lower the autoprec-instrumented twin of the train step (taps
+        # collected as a functional carry) and record its relative cost
+        from repro.launch.steps import build_train_step
+
+        t1 = time.time()
+        tb = build_train_step(cfg, shape, get_policy(policy_name),
+                              telemetry=True)
+        t_in, t_out = bundle_shardings(tb, cfg, mesh, param_specs)
+        with use_mesh(mesh):
+            t_compiled = jax.jit(tb.step_fn, in_shardings=t_in,
+                                 out_shardings=t_out).lower(
+                tb.params_shape, tb.extra_state_shape["opt_state"],
+                tb.inputs["batch"]).compile()
+        t_roof = analyze_counts(parse_hlo(t_compiled.as_text()), n_dev)
+        rec["telemetry"] = {
+            "compile_s": round(time.time() - t1, 1),
+            "roofline": t_roof.to_dict(),
+            "overhead": telemetry_overhead(roof, t_roof),
+        }
+
     if shape.kind == "decode" and prefill_chunk > 0 and not cfg.encoder_decoder:
         # also lower the serve engine's chunked-prefill step against the
         # same cache, so the record shows what chunking buys: the chunk
@@ -146,10 +167,29 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         print("cost_analysis (raw, loop bodies once):", rec["cost_analysis_raw"])
         print("collectives:", counts.collective_by_kind)
         print("roofline:", json.dumps(rec["roofline"], indent=2))
+        if "telemetry" in rec:
+            print("telemetry overhead:", rec["telemetry"]["overhead"])
         if "prefill_chunk" in rec:
             print("prefill_chunk roofline:",
                   json.dumps(rec["prefill_chunk"]["roofline"], indent=2))
     return rec
+
+
+def telemetry_overhead(plain, instrumented) -> dict:
+    """Relative cost of a telemetry-instrumented step vs its plain twin
+    (per-device flops/bytes from the compiled rooflines).  Both dry-runs
+    record this so the autoprec overhead budget (<10% of step cost) is
+    visible at lowering time, before a single real step runs."""
+
+    def rel(a, b):
+        return round(b / a - 1.0, 6) if a else None
+
+    return {
+        "flops_overhead": rel(plain.flops_per_device,
+                              instrumented.flops_per_device),
+        "bytes_overhead": rel(plain.bytes_per_device,
+                              instrumented.bytes_per_device),
+    }
 
 
 def load_results(path=RESULTS):
@@ -179,6 +219,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="also lower the chunked-prefill serve step for "
                          "decode cells at this chunk size (0 = off)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="also lower the autoprec-instrumented train step "
+                         "for train cells and record the telemetry overhead")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-done", action="store_true")
     args = ap.parse_args()
@@ -200,7 +243,8 @@ def main():
                     continue
                 try:
                     rec = run_cell(arch, shape, mp, args.policy,
-                                   prefill_chunk=args.prefill_chunk)
+                                   prefill_chunk=args.prefill_chunk,
+                                   telemetry=args.telemetry)
                 except Exception as e:  # a failure here is a bug
                     traceback.print_exc()
                     rec = {"arch": arch, "shape": shape, "mesh": mesh_name,

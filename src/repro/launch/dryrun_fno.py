@@ -43,7 +43,7 @@ FNO_CELLS = {
 
 
 def run_fno_cell(name: str, multi_pod: bool, policy_name: str,
-                 verbose: bool = True) -> dict:
+                 verbose: bool = True, telemetry: bool = False) -> dict:
     spec = FNO_CELLS[name]
     cfg = spec["cfg"]
     policy = get_policy(policy_name)
@@ -119,10 +119,47 @@ def run_fno_cell(name: str, multi_pod: bool, policy_name: str,
         "collective_bytes_by_kind": counts.collective_by_kind,
         "roofline": roof.to_dict(),
     })
+    if telemetry:
+        # also lower the autoprec-instrumented twin of the train step —
+        # numerics taps collected as a functional carry — and record its
+        # relative flops/bytes cost next to the plain roofline
+        from repro.autoprec import TraceCollector, collecting
+        from repro.launch.dryrun import telemetry_overhead
+
+        t1 = time.time()
+
+        def train_step_telem(params, opt_state, b):
+            def loss_fn(p):
+                col = TraceCollector()
+                with collecting(col):
+                    pred = apply_fn(p, b["x"])
+                    loss = relative_l2(pred, b["y"])
+                return loss, col.snapshot()
+            (loss, telem), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            new_p, new_o = opt.update(grads, opt_state, params)
+            return new_p, new_o, loss, telem
+
+        with use_mesh(mesh):
+            t_compiled = jax.jit(
+                train_step_telem,
+                in_shardings=(p_named, opt_named, b_named),
+                out_shardings=(p_named, opt_named,
+                               NamedSharding(mesh, P()), None),
+            ).lower(p_shape, opt_shape, batch).compile()
+        t_counts = parse_hlo(t_compiled.as_text())
+        t_roof = analyze_counts(t_counts, n_dev)
+        rec["telemetry"] = {
+            "compile_s": round(time.time() - t1, 1),
+            "roofline": t_roof.to_dict(),
+            "overhead": telemetry_overhead(roof, t_roof),
+        }
     if verbose:
         print(f"== {name} ({policy_name}) on {mesh_name} ==")
         print("memory:", rec["memory_analysis"])
         print("roofline:", json.dumps(rec["roofline"], indent=2))
+        if "telemetry" in rec:
+            print("telemetry overhead:", rec["telemetry"]["overhead"])
     return rec
 
 
@@ -131,6 +168,9 @@ def main():
     ap.add_argument("--cell", default=None, choices=list(FNO_CELLS) + [None])
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--policy", default="mixed_fno_bf16")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="also lower the autoprec-instrumented step and "
+                         "record the telemetry overhead")
     args = ap.parse_args()
     cells = [args.cell] if args.cell else list(FNO_CELLS)
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
@@ -138,7 +178,8 @@ def main():
     for c in cells:
         for mp in meshes:
             try:
-                rec = run_fno_cell(c, mp, args.policy)
+                rec = run_fno_cell(c, mp, args.policy,
+                                   telemetry=args.telemetry)
             except Exception as e:
                 traceback.print_exc()
                 rec = {"arch": c, "shape": "train", "mesh": "2x16x16" if mp else "16x16",

@@ -40,6 +40,9 @@ class StepBundle:
     params_shape: Any                # ShapeDtypeStruct pytree
     extra_state_shape: Dict[str, Any]  # opt state / cache, ShapeDtypeStructs
     description: str
+    #: True when step_fn carries an autoprec telemetry snapshot as its
+    #: trailing output (bundle_shardings leaves its sharding unspecified)
+    telemetry: bool = False
 
 
 def _sds(shape, dtype):
@@ -104,14 +107,33 @@ def train_inputs(cfg: LMArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
 
 def build_train_step(cfg: LMArchConfig, shape: ShapeConfig,
                      policy: PrecisionPolicy = AMP_BF16,
-                     optimizer: Optional[AdamW] = None) -> StepBundle:
+                     optimizer: Optional[AdamW] = None,
+                     telemetry: bool = False) -> StepBundle:
     opt = optimizer or AdamW(lr=1e-4)
     loss_fn = _loss_fn(cfg, policy)
 
-    def train_step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        new_params, new_opt = opt.update(grads, opt_state, params)
-        return new_params, new_opt, loss
+    if telemetry:
+        # autoprec-instrumented twin: numerics taps collected inside the
+        # differentiated loss ride out as a trailing step output (the
+        # dry-runs lower both variants and record the overhead)
+        def train_step(params, opt_state, batch):
+            from repro.autoprec import TraceCollector, collecting
+
+            def instrumented(p, b):
+                col = TraceCollector()
+                with collecting(col):
+                    loss = loss_fn(p, b)
+                return loss, col.snapshot()
+
+            (loss, telem), grads = jax.value_and_grad(
+                instrumented, has_aux=True)(params, batch)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return new_params, new_opt, loss, telem
+    else:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return new_params, new_opt, loss
 
     p_shape = params_shape(cfg)
     opt_shape = jax.eval_shape(opt.init, p_shape)
@@ -120,7 +142,9 @@ def build_train_step(cfg: LMArchConfig, shape: ShapeConfig,
         inputs={"batch": train_inputs(cfg, shape)},
         params_shape=p_shape,
         extra_state_shape={"opt_state": opt_shape},
-        description=f"train_step {cfg.name} {shape.name}",
+        description=f"train_step {cfg.name} {shape.name}"
+                    + (" [telemetry]" if telemetry else ""),
+        telemetry=telemetry,
     )
 
 
@@ -266,7 +290,10 @@ def bundle_shardings(bundle: StepBundle, cfg: LMArchConfig, mesh,
         o_named = to_named(
             mesh, opt_specs(bundle.extra_state_shape["opt_state"], param_specs))
         b_named = to_named(mesh, batch_specs(bundle.inputs["batch"], mesh))
-        return (p_named, o_named, b_named), (p_named, o_named, scalar)
+        outs = (p_named, o_named, scalar)
+        if bundle.telemetry:                          # trailing snapshot
+            outs = outs + (None,)
+        return (p_named, o_named, b_named), outs
     if "cache" in bundle.inputs:                     # decode / prefill-chunk
         c_named = to_named(mesh, cache_specs(bundle.inputs["cache"], mesh, cfg))
         t_named = to_named(mesh, batch_specs(bundle.inputs["tokens"], mesh))

@@ -126,8 +126,15 @@ def apply_block_loop(block, h, stacked, policy: PrecisionPolicy, model: str,
     stays one-layer-sized); an unrolled loop when per-layer
     ``precision_rules`` make the layers heterogeneous, so each layer
     lowers at its own formats.  Shared by the FNO and SFNO block loops.
+
+    Also unrolls while an autoprec telemetry collector is in scope: taps
+    inside a scan body would be invisible to the outer trace, and the
+    controller needs each ``<model>/layer<i>/spectral/*`` site reported
+    under its own address.
     """
-    if layers_uniform(policy, model, n_layers):
+    from repro.autoprec.telemetry import telemetry_active
+
+    if layers_uniform(policy, model, n_layers) and not telemetry_active():
         h, _ = jax.lax.scan(lambda c, lp: (block(c, lp, 0), None), h, stacked)
         return h
     for l in range(n_layers):

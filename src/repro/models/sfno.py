@@ -78,6 +78,9 @@ def _spherical_conv(h, w, cfg: SFNOConfig, policy: PrecisionPolicy,
     if isinstance(out, ComplexPair):
         out = out.to_complex()
     y = sht_inverse(out.astype(jnp.complex64), cfg.nlat, cfg.nlon)
+    from repro.autoprec.telemetry import fmt_of, tap
+
+    tap(f"{site}/fft_out", y, fmt=fmt_of(fft_out))
     if fft_out.spectral_is_half:
         y = y.astype(fft_out.compute_dtype)
     return y

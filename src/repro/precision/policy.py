@@ -119,21 +119,38 @@ class SitePrecision:
     def quantize(self, c: jnp.ndarray) -> jnp.ndarray:
         """Round a complex tensor onto this site's storage grid: half
         round-trip (Thm 3.2's representation error) or the simulated fp8
-        grid (Appendix B.11).  Identity when the site is full precision."""
+        grid (Appendix B.11).  Identity when the site is full precision.
+
+        Feeds the autoprec telemetry tap either way (no-op unless a
+        collector is in scope): the pre-quantisation values carry the
+        site's true range — including for sites currently at f32, which
+        is exactly what the controller needs to decide a demotion — and
+        the post-quantisation values give the measured Thm 3.2 error."""
+        from repro.autoprec.telemetry import fmt_of, tap
+
         if self.quantize_fmt is None:
+            tap(self.site, c, fmt=fmt_of(self))
             return c
         from repro.core.precision import quantize_complex, simulate_fp8
 
         if self.quantize_fmt == "half":
-            return quantize_complex(c, self.compute)
-        re = simulate_fp8(jnp.real(c), self.quantize_fmt)
-        im = simulate_fp8(jnp.imag(c), self.quantize_fmt)
-        return jax.lax.complex(re, im)
+            q = quantize_complex(c, self.compute)
+        else:
+            re = simulate_fp8(jnp.real(c), self.quantize_fmt)
+            im = simulate_fp8(jnp.imag(c), self.quantize_fmt)
+            q = jax.lax.complex(re, im)
+        tap(self.site, c, fmt=fmt_of(self), quantized=q)
+        return q
 
     def contract(self, expr: str, *operands, objective: str = "memory", cache=None):
         """Memory-greedy contraction at this site's storage/accum dtypes."""
+        from repro.autoprec.telemetry import fmt_of, tap
         from repro.core.contraction import contract as _contract
 
+        if operands:
+            # tap the activation operand against the contract site's
+            # storage format (the site auto-precision demotes/promotes)
+            tap(self.site, operands[0], fmt=fmt_of(self))
         return _contract(
             expr, *operands, policy=self, objective=objective, cache=cache
         )

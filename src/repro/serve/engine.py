@@ -168,6 +168,7 @@ class LMEngine(EngineBase):
         scheduler: str = "fcfs",
         prefill_chunk: Optional[int] = None,
         seed: int = 0,
+        telemetry: bool = False,
     ):
         if prefill_chunk is None:
             # MoE expert-capacity dispatch depends on the dispatch-batch
@@ -213,6 +214,14 @@ class LMEngine(EngineBase):
         self._n_generated = 0
         self._prefill_ticks = 0
         self._decode_ticks = 0
+        # numerics counters over the decoded logits (the engine's own
+        # observable; already materialised on host, so the checks are
+        # free): running amax and non-finite count — a non-finite row is
+        # a numerics incident under the active precision rule set.
+        self._telemetry_on = telemetry
+        self._logits_amax = 0.0
+        self._logits_nonfinite = 0
+        self._rows_observed = 0
 
         decode_fn = lambda p, c, t: lm_decode_step(p, c, t, cfg, policy)
         chunk_fn = lambda p, c, t, n: lm_prefill_chunk(p, c, t, n, cfg, policy)
@@ -290,6 +299,21 @@ class LMEngine(EngineBase):
             # empty prompts decode from token 0, like the old engine
             self.slot_pending[i] = list(req.prompt) or [0]
 
+    def _observe_logits(self, logits: np.ndarray) -> None:
+        """Update host-side numerics counters over the active slots' rows."""
+        if not self._telemetry_on:
+            return
+        rows = [i for i, s in enumerate(self.slots) if s is not None]
+        if not rows:
+            return
+        sub = logits[rows]
+        finite = np.isfinite(sub)
+        if finite.any():
+            self._logits_amax = max(
+                self._logits_amax, float(np.abs(sub[finite]).max()))
+        self._logits_nonfinite += int((~finite).sum())
+        self._rows_observed += len(rows)
+
     # -- sampling --------------------------------------------------------------
     def _next_token(self, req: Request, logits_row) -> int:
         if req.sampling.temperature <= 0.0:
@@ -351,6 +375,7 @@ class LMEngine(EngineBase):
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(n_valid))
         logits = np.asarray(logits)
+        self._observe_logits(logits)
         self._prefill_ticks += 1
         finished: List[Request] = []
         for i, req in enumerate(self.slots):
@@ -393,6 +418,7 @@ class LMEngine(EngineBase):
             logits, self.cache = self._decode(self.params, self.cache,
                                               jnp.asarray(tokens))
         logits = np.asarray(logits)
+        self._observe_logits(logits)
         self._decode_ticks += 1
         finished: List[Request] = []
         for i, req in enumerate(self.slots):
@@ -423,7 +449,7 @@ class LMEngine(EngineBase):
 
     def _extra_stats(self) -> Dict[str, Any]:
         processed = self._n_prompt_tokens + self._n_generated
-        return {
+        out = {
             "prefill_chunk": self.prefill_chunk,
             "prefill_ticks": self._prefill_ticks,
             "decode_ticks": self._decode_ticks,
@@ -432,6 +458,13 @@ class LMEngine(EngineBase):
             "tokens_per_s": round(processed / self._wall_s, 2)
             if self._wall_s else None,
         }
+        if self._telemetry_on:
+            out["numerics"] = {
+                "logits_amax": self._logits_amax,
+                "logits_nonfinite": self._logits_nonfinite,
+                "rows_observed": self._rows_observed,
+            }
+        return out
 
 
 #: Back-compat alias — PRs 0-2 called the slot engine ``ServeEngine``.

@@ -72,6 +72,9 @@ class OperatorEngine(EngineBase):
         policy: PrecisionPolicy = FULL,
         max_batch: int = 8,
         scheduler: str = "fcfs",
+        telemetry: bool = False,
+        autoprec=None,
+        autoprec_every: int = 4,
     ):
         if model not in ("fno", "sfno"):
             raise ValueError(f"model must be 'fno' or 'sfno', got {model!r}")
@@ -87,8 +90,19 @@ class OperatorEngine(EngineBase):
         self.params = params
         self.cfg = cfg
         self.model = model
-        self.policy = policy
+        # online auto-precision: the controller owns the policy; its
+        # telemetry comes from the same taps the trainer collects
+        self.controller = autoprec
+        self.policy = autoprec.policy() if autoprec is not None else policy
         self.max_batch = max_batch
+        self.autoprec_every = autoprec_every
+        self._telemetry_on = bool(telemetry or autoprec is not None)
+        self._telem = None
+        self._window_max_points = 0
+        if self._telemetry_on:
+            from repro.autoprec import TelemetryAggregator
+
+            self._telem = TelemetryAggregator()
         self._infer = fno_infer if model == "fno" else sfno_infer
         self._steps: Dict[Tuple[int, ...], Any] = {}   # resolution -> jitted
         self._n_fields = 0
@@ -121,8 +135,19 @@ class OperatorEngine(EngineBase):
     def _step_for(self, resolution: Tuple[int, ...]):
         fn = self._steps.get(resolution)
         if fn is None:
-            fn = jax.jit(
-                lambda p, x: self._infer(p, x, self.cfg, self.policy))
+            policy = self.policy
+            if self._telemetry_on:
+                from repro.autoprec import TraceCollector, collecting
+
+                def run(p, x):
+                    col = TraceCollector()
+                    with collecting(col):
+                        y = self._infer(p, x, self.cfg, policy)
+                    return y, col.snapshot()
+            else:
+                def run(p, x):
+                    return self._infer(p, x, self.cfg, policy), {}
+            fn = jax.jit(run)
             self._steps[resolution] = fn
         return fn
 
@@ -146,8 +171,27 @@ class OperatorEngine(EngineBase):
             xb = jnp.concatenate([xb, jnp.zeros((pad, *xb.shape[1:]),
                                                 xb.dtype)])
         res = batch[0].resolution
-        yb = np.asarray(self._step_for(res)(self.params, xb))[:len(batch)]
+        yb, telem = self._step_for(res)(self.params, xb)
+        yb = np.asarray(yb)[:len(batch)]
         self._n_batches += 1
+        if self._telem is not None:
+            self._telem.update(telem)
+            self._window_max_points = max(
+                self._window_max_points, int(np.prod(res, dtype=np.int64)))
+        if (self.controller is not None
+                and self._n_batches % self.autoprec_every == 0):
+            # budget against the finest grid the window saw: with mixed
+            # resolution buckets, the Thm 3.1 bound of the finest field
+            # is the binding one (coarser fields only have more headroom)
+            changed = self.controller.update(
+                self._telem.take_window(),
+                grid_points=self._window_max_points or None)
+            self._window_max_points = 0
+            if changed:
+                # new overlay => new formats: drop the compiled buckets so
+                # the next tick traces under the updated policy
+                self.policy = self.controller.policy()
+                self._steps.clear()
         key = "x".join(map(str, res))
         self._bucket_counts[key] = self._bucket_counts.get(key, 0) + len(batch)
         self._n_fields += len(batch)
@@ -159,9 +203,10 @@ class OperatorEngine(EngineBase):
         return finished
 
     def _extra_stats(self) -> Dict[str, Any]:
-        return {
+        out = {
             "model": self.model,
             "max_batch": self.max_batch,
+            "policy": self.policy.name,
             "fields_served": self._n_fields,
             "batches": self._n_batches,
             "avg_batch_fill": round(
@@ -173,3 +218,8 @@ class OperatorEngine(EngineBase):
             "points_per_s": round(self._n_points / self._wall_s, 2)
             if self._wall_s else None,
         }
+        if self._telem is not None:
+            out["numerics"] = self._telem.counters()
+        if self.controller is not None:
+            out["autoprec"] = self.controller.describe()
+        return out

@@ -54,6 +54,14 @@ class TrainerConfig:
     microbatches: int = 1
     straggler_factor: float = 3.0
     log_every: int = 10
+    #: Auto-precision: an ``repro.autoprec.AutoPrecisionController`` that
+    #: supersedes the static schedule — per-site formats follow runtime
+    #: telemetry plus the Thm 3.1/3.2 budgets.  Also created implicitly
+    #: by ``PrecisionSchedule.auto(...)``.
+    autoprec: Optional[Any] = None
+    #: Collect numerics telemetry (amax / overflow / underflow taps as a
+    #: functional carry of the jitted step) without a controller.
+    telemetry: bool = False
 
 
 class Trainer:
@@ -72,7 +80,24 @@ class Trainer:
         self.scale_state = init_loss_scale()
         self.step = 0
         self.history: list = []
-        self.stats = {"straggler_steps": 0, "skipped_steps": 0, "recompiles": 0}
+        self.stats = {"straggler_steps": 0, "skipped_steps": 0,
+                      "recompiles": 0, "policy_changes": 0}
+        # auto-precision: an explicit controller wins; a schedule in
+        # ``auto`` mode gets a default controller over its base policy
+        self.controller = config.autoprec
+        if (getattr(config.schedule, "mode", "static") == "auto"
+                and self.controller is None):
+            from repro.autoprec import AutoPrecisionController
+
+            self.controller = AutoPrecisionController(
+                base=config.schedule.base,
+                grid_points=getattr(config.schedule, "grid_points", None))
+        self._collect = bool(config.telemetry or self.controller is not None)
+        self.telemetry = None
+        if self._collect:
+            from repro.autoprec import TelemetryAggregator
+
+            self.telemetry = TelemetryAggregator()
         self._steps_cache: Dict[Any, Callable] = {}
         self._preempted = False
         self._ckptr = (
@@ -119,18 +144,34 @@ class Trainer:
     def _build_step(self, policy: PrecisionPolicy) -> Callable:
         opt = self.cfg.optimizer
         nmicro = self.cfg.microbatches
+        collect = self._collect
         # decided by the resolved rule table (train/loss_scale site), so a
         # precision_rules override can flip it per run without a new policy
         use_scaling = loss_scaling_required(policy)
 
         def micro_grads(params, batch, scale_state):
+            # The telemetry collector lives *inside* the differentiated
+            # function: taps record tracers of the loss trace and the
+            # snapshot rides out through has_aux, so collection works
+            # under grad and per-iteration inside the microbatch scan.
             def scaled_loss(p, b):
-                loss = self.loss_fn(p, b, policy)
-                return scale_loss(loss, scale_state) if use_scaling else loss
+                if collect:
+                    from repro.autoprec import TraceCollector, collecting
 
+                    col = TraceCollector()
+                    with collecting(col):
+                        loss = self.loss_fn(p, b, policy)
+                    telem = col.snapshot()
+                else:
+                    loss = self.loss_fn(p, b, policy)
+                    telem = {}
+                return (scale_loss(loss, scale_state) if use_scaling
+                        else loss), telem
+
+            grad_fn = jax.value_and_grad(scaled_loss, has_aux=True)
             if nmicro == 1:
-                loss, grads = jax.value_and_grad(scaled_loss)(params, batch)
-                return loss, grads
+                (loss, telem), grads = grad_fn(params, batch)
+                return loss, grads, telem
             # split the leading batch axis into microbatches and scan
             def resplit(x):
                 return x.reshape(nmicro, x.shape[0] // nmicro, *x.shape[1:])
@@ -139,21 +180,25 @@ class Trainer:
 
             def body(carry, b):
                 acc_loss, acc_g = carry
-                loss, g = jax.value_and_grad(scaled_loss)(params, b)
+                (loss, telem), g = grad_fn(params, b)
                 acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
-                return (acc_loss + loss, acc_g), None
+                return (acc_loss + loss, acc_g), telem
 
             zero_g = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            (loss, grads), _ = jax.lax.scan(
+            (loss, grads), telems = jax.lax.scan(
                 body, (jnp.zeros((), jnp.float32), zero_g), mb
             )
+            if collect:
+                from repro.autoprec import merge_stacked
+
+                telems = merge_stacked(telems)
             inv = 1.0 / nmicro
-            return loss * inv, jax.tree_util.tree_map(lambda g: g * inv, grads)
+            return loss * inv, jax.tree_util.tree_map(lambda g: g * inv, grads), telems
 
         def train_step(params, opt_state, scale_state, batch):
-            loss, grads = micro_grads(params, batch, scale_state)
+            loss, grads, telem = micro_grads(params, batch, scale_state)
             if use_scaling:
                 grads = unscale_grads(grads, scale_state)
                 loss = loss / scale_state.scale
@@ -169,7 +214,7 @@ class Trainer:
             new_scale = (
                 update_loss_scale(scale_state, finite) if use_scaling else scale_state
             )
-            return new_params, new_opt, new_scale, loss, finite
+            return new_params, new_opt, new_scale, loss, finite, telem
 
         return jax.jit(train_step, donate_argnums=(0, 1))
 
@@ -191,11 +236,17 @@ class Trainer:
         total = steps if steps is not None else self.cfg.total_steps
         ewma = None
         while self.step < total and not self._preempted:
-            policy = self.cfg.schedule.policy_at(self.step, self.cfg.total_steps)
+            if self.controller is not None:
+                # auto mode: the controller's overlay decides the formats;
+                # a version bump resolves to a new (name, rules) key and
+                # the step cache recompiles exactly once per change
+                policy = self.controller.policy()
+            else:
+                policy = self.cfg.schedule.policy_at(self.step, self.cfg.total_steps)
             fn = self._step_fn(policy)
             batch = batch_fn(self.step)
             t0 = time.perf_counter()
-            self.params, self.opt_state, self.scale_state, loss, finite = fn(
+            self.params, self.opt_state, self.scale_state, loss, finite, telem = fn(
                 self.params, self.opt_state, self.scale_state, batch
             )
             loss = float(loss)
@@ -205,8 +256,15 @@ class Trainer:
             if ewma is not None and dt > self.cfg.straggler_factor * ewma:
                 self.stats["straggler_steps"] += 1
             ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            if self.telemetry is not None:
+                self.telemetry.update(telem)
             self.history.append({"step": self.step, "loss": loss, "policy": policy.name, "dt": dt})
             self.step += 1
+            if (self.controller is not None
+                    and self.step % self.controller.config.interval == 0):
+                if self.controller.update(self.telemetry.take_window(),
+                                          step=self.step):
+                    self.stats["policy_changes"] += 1
             if self._ckptr is not None and self.step % self.cfg.ckpt_every == 0:
                 self.save()
         if self._preempted and self._ckptr is not None:

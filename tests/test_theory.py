@@ -1,0 +1,105 @@
+"""Direct tests for ``repro.core.theory``: Thm 3.1/3.2 bound
+monotonicity (disc bound shrinks with n, prec bound scales with ε·M)
+and the empirical estimators against the closed forms."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autoprec.certify import measured_prec_error, random_fourier_field
+from repro.core import theory
+from repro.core.precision import FORMAT_EPS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestDiscBoundMonotonicity:
+    def test_upper_bound_shrinks_with_n(self):
+        ns = [64, 256, 1024, 4096, 16384]
+        bs = [theory.disc_upper_bound(n, d=2, omega=1.0, L=1.0, M=1.0)
+              for n in ns]
+        assert all(b1 > b2 for b1, b2 in zip(bs, bs[1:]))
+
+    def test_upper_bound_rate_is_n_pow_minus_1_over_d(self):
+        for d in (1, 2, 3):
+            b1 = theory.disc_upper_bound(256, d, 1.0, 1.0, 1.0)
+            b2 = theory.disc_upper_bound(256 * 2 ** d, d, 1.0, 1.0, 1.0)
+            np.testing.assert_allclose(b1 / b2, 2.0, rtol=1e-12)
+
+    def test_lower_bound_shrinks_faster(self):
+        # n^{-2/d} decays strictly faster than n^{-1/d}
+        d = 2
+        r_up = (theory.disc_upper_bound(100, d, 1, 1, 1)
+                / theory.disc_upper_bound(10000, d, 1, 1, 1))
+        r_lo = (theory.disc_lower_bound(100, d, 1.0)
+                / theory.disc_lower_bound(10000, d, 1.0))
+        assert r_lo > r_up
+
+    def test_lower_below_upper_at_moderate_n(self):
+        for n in (256, 4096, 65536):
+            lo = theory.disc_lower_bound(n, 2, M=1.0)
+            up = theory.disc_upper_bound(n, 2, omega=1.0, L=1.0, M=1.0)
+            assert lo < up
+
+    def test_grows_with_frequency_and_lipschitz(self):
+        b = lambda omega, L: theory.disc_upper_bound(1024, 2, omega, L, 1.0)  # noqa: E731
+        assert b(4.0, 1.0) > b(1.0, 1.0)
+        assert b(1.0, 4.0) > b(1.0, 1.0)
+
+
+class TestPrecBoundScaling:
+    def test_linear_in_eps_and_M(self):
+        base = theory.prec_upper_bound(1e-3, 1.0)
+        np.testing.assert_allclose(theory.prec_upper_bound(2e-3, 1.0), 2 * base)
+        np.testing.assert_allclose(theory.prec_upper_bound(1e-3, 3.0), 3 * base)
+        # the paper's proof constant
+        np.testing.assert_allclose(base, 4e-3)
+
+    def test_lower_below_upper(self):
+        assert (theory.prec_lower_bound(1e-3, 2.0)
+                < theory.prec_upper_bound(1e-3, 2.0))
+
+    def test_format_ladder_ordering(self):
+        # coarser formats have strictly larger worst cases
+        bounds = [theory.prec_upper_bound(FORMAT_EPS[f], 1.0)
+                  for f in ("float32", "float16", "bfloat16",
+                            "fp8_e4m3", "fp8_e5m2")]
+        assert all(a < b for a, b in zip(bounds, bounds[1:]))
+
+    def test_crossover_grows_as_eps_shrinks(self):
+        # finer formats stay "free" up to larger meshes
+        n_fp16 = theory.crossover_mesh_size(FORMAT_EPS["float16"], d=3)
+        n_bf16 = theory.crossover_mesh_size(FORMAT_EPS["bfloat16"], d=3)
+        assert n_fp16 > n_bf16
+        assert n_fp16 > 1e5  # the paper's "n* ~ 1e6 for d=3, fp16" order
+
+
+class TestEmpiricalEstimators:
+    def test_disc_error_shrinks_with_mesh(self):
+        v, L, M = random_fourier_field(0, d=2)
+        errs = [theory.disc_error(v, m, 2, omega=1.0) for m in (6, 12, 24)]
+        assert errs[0] > errs[-1]
+        # and stays under the closed-form bound with the analytic L, M
+        for m, e in zip((6, 12, 24), errs):
+            assert e <= theory.disc_upper_bound(m * m, 2, 1.0, L, M)
+
+    @pytest.mark.parametrize("fmt", ["float16", "bfloat16", "fp8_e4m3"])
+    def test_prec_error_under_bound(self, fmt):
+        v, _, M = random_fourier_field(0, d=2)
+        err = measured_prec_error(v, 12, 2, 1.0, fmt)
+        assert err <= theory.prec_upper_bound(FORMAT_EPS[fmt], M)
+        assert err > 0.0
+
+    def test_prec_error_tracks_format_coarseness(self):
+        v, _, _ = random_fourier_field(3, d=2)
+        e16 = measured_prec_error(v, 12, 2, 1.0, "float16")
+        e8 = measured_prec_error(v, 12, 2, 1.0, "fp8_e5m2")
+        assert e8 > e16
+
+    def test_estimate_lipschitz_and_bound(self):
+        xs = np.linspace(0.0, 1.0, 65)[:-1]
+        field = np.sin(2 * math.pi * xs)[None, :] * np.ones((64, 1))
+        L, M = theory.estimate_lipschitz_and_bound(field)
+        assert 0.9 <= M <= 1.0
+        assert 5.0 <= L <= 2 * math.pi + 0.5  # |d/dx sin(2πx)| <= 2π
