@@ -1,0 +1,160 @@
+"""Kernel differential benchmark: the Pallas spectral path vs the einsum
+reference, forward AND backward, wall-clock + compiled peak memory.
+
+This is the measurement half of the training-grade kernel PR: for dense
+and CP-factorised contractions it times ``value_and_grad`` through both
+paths and records the compiled step's ``temp_size_in_bytes`` (the CPU
+container's analogue of the paper's GPU peak-memory numbers; on TPU the
+same harness prices the Mosaic kernels).  On CPU the Pallas kernels run
+in *interpret mode*, so their wall numbers measure the harness, not the
+hardware — the JSON records ``interpret`` so readers don't compare
+apples to Mosaic.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--policy mixed_fno_bf16]
+
+Results land in ``benchmarks/results/kernels.json`` (uploaded by the CI
+bench-smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import get_policy
+from repro.core.spectral import _cp_exprs, _dense_expr
+from repro.kernels import ops
+from repro.kernels.spectral_contract import (
+    cp_vmem_bytes, pick_block_m, vmem_bytes, vmem_bytes_bwd)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "kernels.json")
+
+CASES = {
+    # name: (B, I, O, modes) — small enough for CI, big enough that the
+    # contraction dominates the traced graph
+    "dense-2d": (4, 32, 32, (12, 12)),
+    "dense-3d": (2, 16, 16, (6, 6, 6)),
+    "cp-2d": (4, 32, 32, (12, 12)),
+}
+
+
+def _randc(rng, shape, scale=0.5):
+    return jnp.asarray(
+        scale * (rng.randn(*shape) + 1j * rng.randn(*shape)), jnp.complex64)
+
+
+def _temp_bytes(fn, *args) -> int:
+    mem = jax.jit(fn).lower(*args).compile().memory_analysis()
+    return int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+
+
+def bench_case(name: str, policy_name: str, seed: int = 0) -> dict:
+    B, I, O, modes = CASES[name]
+    kind = name.split("-")[0]
+    ndim = len(modes)
+    policy = get_policy(policy_name)
+    site = policy.at("fno/layer0/spectral/contract")
+    rng = np.random.RandomState(seed)
+    x = _randc(rng, (B, I, *modes))
+    M = int(np.prod(modes))
+    # the same tile the production wrapper auto-picks (block_m=None):
+    # dense vs CP working-set model, at the policy's storage itemsize
+    half = site.spectral_dtype or jnp.float32
+    itemsize = jnp.dtype(half).itemsize
+    R = I
+    if kind == "dense":
+        block_m = pick_block_m(B, I, O, M, itemsize=itemsize)
+    else:
+        block_m = pick_block_m(B, I, O, M, rank=R, itemsize=itemsize)
+
+    if kind == "dense":
+        w = _randc(rng, (I, O, *modes))
+        operands = (w,)
+        expr = _dense_expr(ndim)
+
+        def pallas_loss(x, *ws):
+            y = ops.spectral_contract(x, ws[0], policy=site, block_m=block_m)
+            return _abs2(y)
+
+        vmem = {"fwd": vmem_bytes(B, I, O, block_m),
+                "bwd": vmem_bytes_bwd(B, I, O, block_m)}
+    else:
+        operands = (_randc(rng, (R,)), _randc(rng, (I, R)),
+                    _randc(rng, (O, R)),
+                    *[_randc(rng, (m, R)) for m in modes])
+        expr = _cp_exprs(ndim)
+
+        def pallas_loss(x, *ws):
+            y = ops.spectral_contract_cp(x, ws[0], ws[1], ws[2],
+                                         list(ws[3:]), policy=site,
+                                         block_m=block_m)
+            return _abs2(y)
+
+        vmem = {"fwd": cp_vmem_bytes(B, I, O, R, block_m),
+                "bwd": cp_vmem_bytes(B, I, O, R, block_m)}
+
+    def _abs2(y):
+        if hasattr(y, "abs2"):
+            return jnp.sum(y.abs2())
+        return jnp.sum(jnp.abs(y) ** 2)
+
+    def einsum_loss(x, *ws):
+        return _abs2(site.contract(expr, x, *ws))
+
+    row = {
+        "case": name, "policy": policy_name,
+        "B": B, "I": I, "O": O, "modes": list(modes),
+        "block_m": block_m, "vmem_bytes": vmem,
+        "interpret": jax.default_backend() != "tpu",
+    }
+    for label, loss in (("einsum", einsum_loss), ("pallas", pallas_loss)):
+        fwd = jax.jit(loss)
+        bwd = jax.jit(jax.value_and_grad(loss, argnums=(0,)))
+        row[label] = {
+            "fwd_us": time_fn(fwd, x, *operands),
+            "fwd_bwd_us": time_fn(bwd, x, *operands),
+            "fwd_temp_bytes": _temp_bytes(loss, x, *operands),
+            "fwd_bwd_temp_bytes": _temp_bytes(
+                jax.value_and_grad(loss, argnums=(0,)), x, *operands),
+        }
+    row["pallas_over_einsum_wall"] = round(
+        row["pallas"]["fwd_bwd_us"] / max(row["einsum"]["fwd_bwd_us"], 1e-9), 3)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", nargs="*",
+                    default=["full", "mixed_fno_bf16"])
+    ap.add_argument("--case", nargs="*", default=sorted(CASES))
+    args = ap.parse_args()
+
+    rows = []
+    print(f"== bench_kernels (backend={jax.default_backend()}) ==")
+    print(f"{'case':>10s} {'policy':>16s} {'einsum f+b us':>14s} "
+          f"{'pallas f+b us':>14s} {'ratio':>7s} {'temp MiB e/p':>14s}")
+    for case in args.case:
+        for pol in args.policy:
+            row = bench_case(case, pol)
+            rows.append(row)
+            print(f"{case:>10s} {pol:>16s} "
+                  f"{row['einsum']['fwd_bwd_us']:>14.0f} "
+                  f"{row['pallas']['fwd_bwd_us']:>14.0f} "
+                  f"{row['pallas_over_einsum_wall']:>7.2f} "
+                  f"{row['einsum']['fwd_bwd_temp_bytes'] / 2**20:>6.1f}/"
+                  f"{row['pallas']['fwd_bwd_temp_bytes'] / 2**20:<6.1f}")
+
+    report = {"backend": jax.default_backend(), "rows": rows}
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"results -> {RESULTS}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ the Pallas kernel (``repro.kernels``).
 from __future__ import annotations
 
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,12 @@ def _n_corners(ndim: int) -> int:
     # rfftn halves the last axis only; every other truncated axis keeps the
     # low and high mode blocks => 2^(ndim-1) corner blocks.
     return 2 ** (ndim - 1)
+
+
+def cp_rank(in_channels: int, out_channels: int, rank: float) -> int:
+    """The CP rank a ``rank`` fraction resolves to — shared by the weight
+    initialiser and the dry-run VMEM budgeter so they can never drift."""
+    return max(1, int(rank * min(in_channels, out_channels) * 2))
 
 
 def init_spectral_weights(
@@ -64,7 +70,7 @@ def init_spectral_weights(
             "w_im": scale * jax.random.normal(k2, shape, jnp.float32),
         }
     if factorization == "cp":
-        r = max(1, int(rank * min(in_channels, out_channels) * 2))
+        r = cp_rank(in_channels, out_channels, rank)
         keys = jax.random.split(key, 2 * (2 + ndim) + 2)
         params = {}
         params["lam_re"] = scale * jax.random.normal(keys[0], (nc, r), jnp.float32)
@@ -200,7 +206,7 @@ def spectral_conv_apply(
     x: jnp.ndarray,
     modes: Sequence[int],
     policy: PrecisionPolicy = FULL,
-    use_pallas: bool = False,
+    use_pallas: Optional[bool] = None,
     site: str = "model/spectral",
 ) -> jnp.ndarray:
     """Apply the Fourier convolution to ``x`` of shape (batch, ch, *spatial).
@@ -213,11 +219,23 @@ def spectral_conv_apply(
     addressed individually.  Under the ``full`` rule set every site
     resolves to f32/complex64 and this is the exact full-precision FNO
     reference.
+
+    ``use_pallas``: tri-state.  ``None`` resolves via
+    ``kernels.ops.resolve_use_pallas`` (on for TPU backends and under
+    ``REPRO_USE_PALLAS=1``); when on, dense and CP contractions run the
+    training-grade Pallas kernels (custom-VJP backward, same telemetry
+    taps), while Tucker keeps the einsum path — its core tensor has no
+    mode-major kernel layout.
     """
     ndim = len(modes)
     spatial = x.shape[2:]
     assert len(spatial) == ndim, (x.shape, modes)
     in_dtype = x.dtype
+    kind = _kind(params)
+    if use_pallas is None or use_pallas:
+        from repro.kernels.ops import resolve_use_pallas
+
+        use_pallas = resolve_use_pallas(use_pallas)
 
     fft_in = policy.at(f"{site}/fft_in")
     ctr = policy.at(f"{site}/contract")
@@ -240,11 +258,19 @@ def spectral_conv_apply(
     for c, sl in enumerate(corners):
         xc = xf[(slice(None), slice(None), *sl)]
         ops, expr = _corner_weight_ops(params, c, ndim)
-        if use_pallas and _kind(params) == "dense":
+        if use_pallas and kind == "dense":
             from repro.kernels import ops as kops
 
             yc = kops.spectral_contract(xc, ops[0], policy=ctr)
+        elif use_pallas and kind == "cp":
+            from repro.kernels import ops as kops
+
+            yc = kops.spectral_contract_cp(
+                xc, ops[0], ops[1], ops[2], ops[3:], policy=ctr)
         else:
+            # Tucker (and any future factorisation without a kernel
+            # layout) falls back to the memory-greedy einsum path —
+            # explicitly, never by silently reinterpreting the params.
             yc = ctr.contract(expr, xc, *ops)
         if isinstance(yc, ComplexPair):
             yc = yc.to_complex()

@@ -5,16 +5,35 @@ These are the entry points the model code calls.  They handle:
   * mode flattening / padding,
   * interpret-mode selection (CPU container validates kernels in interpret
     mode; on TPU the same call compiles to Mosaic),
-  * falling back shapes that the kernels don't support.
+  * the autoprec telemetry tap at the contract site — the same
+    ``tap(site, activation, fmt)`` stream ``SitePrecision.contract``
+    feeds on the einsum path, so the controller's demotion decisions see
+    identical amax/overflow streams whichever path runs,
+  * explicit rejection of inputs the kernels don't support (Tucker
+    factors and rank-mismatched operands fall back to the einsum path in
+    ``core/spectral.py``, never silently through this one).
 """
 from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.precision import ComplexPair
 from repro.precision import FULL, PrecisionPolicy
-from .spectral_contract import spectral_contract_pallas, vmem_bytes
+from .spectral_contract import (
+    cp_vmem_bytes,
+    lshared_vmem_bytes,
+    pick_block_l,
+    pick_block_m,
+    spectral_contract_cp_pallas,
+    spectral_contract_lshared_pallas,
+    spectral_contract_pallas,
+    vmem_bytes,
+    vmem_bytes_bwd,
+)
 from .flash_attention import flash_attention as _flash
 from .rmsnorm import rmsnorm as _rmsnorm
 
@@ -23,14 +42,61 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_use_pallas(flag: Optional[bool] = None) -> bool:
+    """Resolve a tri-state ``use_pallas`` setting.
+
+    Explicit True/False wins; ``None`` means *auto*: on when the env var
+    ``REPRO_USE_PALLAS`` is truthy (the tier-1 CI leg sets it to run the
+    whole suite through the kernels in interpret mode), otherwise on
+    exactly when the backend is a TPU (where the kernels compile to
+    Mosaic; interpret mode elsewhere stays opt-in).
+    """
+    if flag is not None:
+        return bool(flag)
+    env = os.environ.get("REPRO_USE_PALLAS")
+    if env is not None and env != "":
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() == "tpu"
+
+
+def _site_of(policy, site: str):
+    """Resolve a PrecisionPolicy at ``site``; pass SitePrecision through."""
+    if isinstance(policy, PrecisionPolicy):
+        return policy.at(site)
+    return policy
+
+
+def _tap_contract(policy, x) -> None:
+    # same telemetry stream as SitePrecision.contract on the einsum path:
+    # the activation operand against the site's storage format
+    from repro.autoprec.telemetry import fmt_of, tap
+
+    tap(policy.site, x, fmt=fmt_of(policy))
+
+
+def _to_pair(x, half) -> ComplexPair:
+    if isinstance(x, ComplexPair):
+        return x if x.dtype == half else x.astype(half)
+    return ComplexPair.from_complex(x, half)
+
+
 def spectral_contract(
-    x, w, *, policy=FULL, block_m: int = 64,
+    x, w, *, policy=FULL, block_m: Optional[int] = None,
     site: str = "model/spectral/contract",
 ):
     """Dense spectral contraction ``bi<modes>,io<modes>->bo<modes>``.
 
+    ``block_m=None`` (the production default) resolves the mode tile via
+    ``pick_block_m`` from the actual shapes and storage itemsize — the
+    same estimate the dry-runs record, so their ``fits_vmem`` verdict
+    describes the tiling that really executes.
+
     ``x``: complex64 or ComplexPair, shape (B, I, *modes);
-    ``w``: complex64 (the layer's dense corner weight), shape (I, O, *modes).
+    ``w``: complex64 or ComplexPair (the layer's dense corner weight),
+    shape (I, O, *modes).  Anything else — CP/Tucker factor dicts, rank
+    mismatches — raises ``ValueError`` (the factorised paths are
+    ``spectral_contract_cp`` and the einsum fallback in
+    ``core/spectral.py``; nothing is silently reinterpreted here).
     ``policy``: an already-resolved ``SitePrecision`` handed down by the
     model (``policy.at("fno/layer2/spectral/contract")``), or a bare
     ``PrecisionPolicy`` — then resolved here at ``site``, which direct
@@ -38,33 +104,148 @@ def spectral_contract(
     ``precision_rules`` overrides to reach this path.
     Returns the same kind as ``x`` (ComplexPair under a half rule).
     """
-    if isinstance(policy, PrecisionPolicy):
-        policy = policy.at(site)
+    policy = _site_of(policy, site)
+    for name, a in (("x", x), ("w", w)):
+        if not (isinstance(a, ComplexPair) or hasattr(a, "ndim")):
+            raise ValueError(
+                f"spectral_contract: {name} is {type(a).__name__}, not a "
+                f"dense array/ComplexPair — factorised (CP/Tucker) weights "
+                f"must go through spectral_contract_cp or the einsum path"
+            )
+    if len(x.shape) != len(w.shape) or len(x.shape) < 3:
+        raise ValueError(
+            f"spectral_contract is dense-only: expected x (B, I, *modes) "
+            f"and w (I, O, *modes) of equal rank >= 3, got {x.shape} vs "
+            f"{w.shape} — CP/Tucker factors take spectral_contract_cp or "
+            f"the einsum fallback in core/spectral.py"
+        )
     half = policy.spectral_dtype or jnp.float32
     was_pair = isinstance(x, ComplexPair)
-    if not was_pair:
-        x = ComplexPair.from_complex(x, half)
-    wp = ComplexPair.from_complex(w, half) if not isinstance(w, ComplexPair) else w
+    _tap_contract(policy, x)
+    xp = _to_pair(x, half)
+    wp = _to_pair(w, half)
 
-    B, I, *modes = x.re.shape
+    B, I, *modes = xp.re.shape
     I2, O, *modes2 = wp.re.shape
-    assert tuple(modes) == tuple(modes2) and I == I2, (x.re.shape, wp.re.shape)
+    if tuple(modes) != tuple(modes2) or I != I2:
+        raise ValueError(
+            f"spectral_contract: x {xp.re.shape} and w {wp.re.shape} "
+            f"disagree on channels or modes"
+        )
     M = 1
     for m in modes:
         M *= m
-
-    xr = x.re.reshape(B, I, M)
-    xi = x.im.reshape(B, I, M)
-    wr = wp.re.reshape(I, O, M)
-    wi = wp.im.reshape(I, O, M)
+    if block_m is None:
+        block_m = pick_block_m(B, I, O, M,
+                               itemsize=jnp.dtype(half).itemsize)
 
     out_re, out_im = spectral_contract_pallas(
-        xr, xi, wr, wi, block_m=block_m, interpret=_use_interpret(),
-        out_dtype=half,
+        xp.re.reshape(B, I, M), xp.im.reshape(B, I, M),
+        wp.re.reshape(I, O, M), wp.im.reshape(I, O, M),
+        block_m=block_m, interpret=_use_interpret(), out_dtype=half,
     )
     pair = ComplexPair(
         out_re.reshape(B, O, *modes), out_im.reshape(B, O, *modes)
     )
+    if was_pair and policy.spectral_is_half:
+        return pair
+    return pair.to_complex()
+
+
+def cp_mode_factor(lam, mode_factors: Sequence) -> jnp.ndarray:
+    """Fold λ (R,) and the per-axis CP factors (m_k, R) into the combined
+    mode factor ``W[r, m] = λ_r Π_k U_mk[m_k, r]`` over the row-major
+    flattened mode index (tiny, differentiable jnp — the kernels never
+    materialise the dense (I, O, M) weight this factor replaces)."""
+    w = lam[:, None]
+    for f in mode_factors:
+        w = (w[:, :, None] * jnp.transpose(f)[:, None, :]).reshape(
+            w.shape[0], -1)
+    return w
+
+
+def spectral_contract_cp(
+    x, lam, ui, uo, mode_factors: Sequence, *, policy=FULL,
+    block_m: Optional[int] = None, site: str = "model/spectral/contract",
+):
+    """CP-factorised spectral contraction (TFNO §4.6) on the Pallas path.
+
+    ``x``: complex64 or ComplexPair (B, I, *modes); ``lam``: (R,) complex
+    CP weights; ``ui``/``uo``: (I, R)/(O, R) channel factors;
+    ``mode_factors``: one (m_k, R) complex factor per mode axis.
+    Returns the same kind as ``x`` (ComplexPair under a half rule).
+    """
+    policy = _site_of(policy, site)
+    half = policy.spectral_dtype or jnp.float32
+    was_pair = isinstance(x, ComplexPair)
+    _tap_contract(policy, x)
+    xp = _to_pair(x, half)
+
+    B, I, *modes = xp.re.shape
+    if len(mode_factors) != len(modes):
+        raise ValueError(
+            f"spectral_contract_cp: {len(mode_factors)} mode factors for "
+            f"{len(modes)}-d modes {tuple(modes)}"
+        )
+    M = 1
+    for m in modes:
+        M *= m
+    w = cp_mode_factor(lam, mode_factors)  # (R, M) complex
+    uip = _to_pair(ui, half)
+    uop = _to_pair(uo, half)
+    wp = _to_pair(w, half)
+    O = uop.re.shape[0]
+    if block_m is None:
+        block_m = pick_block_m(B, I, O, M, rank=uip.re.shape[1],
+                               itemsize=jnp.dtype(half).itemsize)
+
+    out_re, out_im = spectral_contract_cp_pallas(
+        xp.re.reshape(B, I, M), xp.im.reshape(B, I, M),
+        uip.re, uip.im, uop.re, uop.im, wp.re, wp.im,
+        block_m=block_m, interpret=_use_interpret(), out_dtype=half,
+    )
+    pair = ComplexPair(
+        out_re.reshape(B, O, *modes), out_im.reshape(B, O, *modes)
+    )
+    if was_pair and policy.spectral_is_half:
+        return pair
+    return pair.to_complex()
+
+
+def spectral_contract_lshared(
+    x, w, *, policy=FULL, block_l: Optional[int] = None,
+    site: str = "model/spectral/contract",
+):
+    """Order-shared spherical contraction ``bilm,iol->bolm`` (SFNO).
+
+    ``x``: complex64 or ComplexPair, shape (B, I, L, M) — the (degree,
+    order) spherical spectrum; ``w``: complex64 or ComplexPair (I, O, L),
+    shared across orders m per the spherical convolution theorem.  The
+    kernel tiles over degrees and reduces m in-tile, so the dense
+    (I, O, L, M) weight (and its gradient) is never materialised.
+    Returns the same kind as ``x`` (ComplexPair under a half rule).
+    """
+    policy = _site_of(policy, site)
+    if len(x.shape) != 4 or len(w.shape) != 3:
+        raise ValueError(
+            f"spectral_contract_lshared: expected x (B, I, L, M) and "
+            f"w (I, O, L), got {x.shape} vs {w.shape}"
+        )
+    half = policy.spectral_dtype or jnp.float32
+    was_pair = isinstance(x, ComplexPair)
+    _tap_contract(policy, x)
+    xp = _to_pair(x, half)
+    wp = _to_pair(w, half)
+    B, I, L, Mm = xp.re.shape
+    O = wp.re.shape[1]
+    if block_l is None:
+        block_l = pick_block_l(B, I, O, L, Mm,
+                               itemsize=jnp.dtype(half).itemsize)
+    out_re, out_im = spectral_contract_lshared_pallas(
+        xp.re, xp.im, wp.re, wp.im,
+        block_l=block_l, interpret=_use_interpret(), out_dtype=half,
+    )
+    pair = ComplexPair(out_re, out_im)
     if was_pair and policy.spectral_is_half:
         return pair
     return pair.to_complex()
@@ -92,4 +273,9 @@ def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
     return out.reshape(shape)
 
 
-__all__ = ["spectral_contract", "flash_attention", "rmsnorm", "vmem_bytes"]
+__all__ = [
+    "spectral_contract", "spectral_contract_cp", "spectral_contract_lshared",
+    "cp_mode_factor", "flash_attention", "rmsnorm", "resolve_use_pallas",
+    "vmem_bytes", "vmem_bytes_bwd", "cp_vmem_bytes", "lshared_vmem_bytes",
+    "pick_block_m", "pick_block_l",
+]

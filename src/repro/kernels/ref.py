@@ -20,6 +20,20 @@ def spectral_contract_ref(
     return jnp.einsum("bim,iom->bom", x, w)
 
 
+def spectral_contract_cp_ref(
+    x: jnp.ndarray, lam: jnp.ndarray, ui: jnp.ndarray, uo: jnp.ndarray,
+    w_modes: jnp.ndarray,
+) -> jnp.ndarray:
+    """Oracle for the CP-factorised contraction with the combined mode
+    factor already folded (``w_modes[r, m] = λ_r Π_k U_mk[m_k, r]``;
+    pass ``lam = ones`` in that case, or the raw λ with the bare product
+    of mode factors).
+
+    x: (B, I, M); ui: (I, R); uo: (O, R); w_modes: (R, M) -> (B, O, M).
+    """
+    return jnp.einsum("bim,r,ir,or,rm->bom", x, lam, ui, uo, w_modes)
+
+
 def flash_attention_ref(
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True
 ) -> jnp.ndarray:

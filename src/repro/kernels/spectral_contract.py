@@ -1,27 +1,55 @@
-"""Pallas TPU kernel for the mixed-precision spectral tensor contraction.
+"""Pallas TPU kernels for the mixed-precision spectral tensor contraction.
 
 This is the paper's compute hot-spot (Appendix B.4: complex-valued tensor
-contraction = 4 of the top-5 GPU kernels).  The GPU implementation uses
-``view_as_real`` + cuBLAS half GEMMs; the TPU-native adaptation tiles the
-contraction over *retained Fourier modes* into VMEM and issues, per tile,
-a batched complex matmul as four real MXU matmuls with f32 accumulation:
+contraction = 4 of the top-5 GPU kernels, forward *and* backward).  The GPU
+implementation uses ``view_as_real`` + cuBLAS half GEMMs; the TPU-native
+adaptation tiles the contraction over *retained Fourier modes* into VMEM and
+issues, per tile, a batched complex matmul as four real MXU matmuls with f32
+accumulation:
 
     out[b,o,m] = Σ_i x[b,i,m] · w[i,o,m]          (complex, per mode m)
 
+The op is **training-grade**: it carries a ``jax.custom_vjp`` whose backward
+pass is two more Pallas kernels on the *same* mode-tiled schedule —
+
+    dL/dx[b,i,m] = Σ_o g[b,o,m] · conj(w[i,o,m])     (contract O per tile)
+    dL/dw[i,o,m] = Σ_b conj(x[b,i,m]) · g[b,o,m]     (contract B per tile)
+
+— which are exactly the real-valued VJPs of the split-real 4-matmul forward
+(the conjugations fall out of the rr−ii / ri+ir component algebra).  Both
+accumulate at f32 (f64 under an ``enable_x64`` gradcheck) and store at the
+primal dtypes, matching the forward's error model: half *storage*, full
+*accumulation* — precisely what Theorem 3.2 bounds.
+
+A second kernel family handles the **CP-factorised** contraction (TFNO,
+paper §4.6).  The wrapper folds λ and the per-mode factors into one mode
+factor ``W[r,m] = λ_r Π_k U_mk[m_k,r]`` (tiny, jnp, differentiable) and the
+kernel then runs, per mode tile, the three factorised stages without ever
+materialising the dense (I,O,M) weight:
+
+    t[b,m,r] = Σ_i x[b,i,m] U_i[i,r]      rank-project   (4 real matmuls)
+    u[b,m,r] = t[b,m,r] · W[r,m]          mode-scale     (VPU elementwise)
+    o[b,o,m] = Σ_r u[b,m,r] U_o[o,r]      rank-expand    (4 real matmuls)
+
+Its backward is one Pallas kernel that recomputes t,u in-tile (cheaper than
+saving rank-space residuals to HBM) and emits all four gradients; dU_i/dU_o
+are mode-independent, so their output blocks revisit across the sequential
+grid and accumulate in place at f32.
+
 Layout decisions (HBM→VMEM→MXU):
-  * modes are flattened to one axis ``M`` and tiled by ``block_m`` — each
-    grid step holds (B·I + I·O + B·O)·block_m·2 half words in VMEM;
-  * channels (I, O) are MXU-aligned by the wrapper (pad to multiples of 8;
-    128 is the sweet spot for v5e) and contracted with
+  * modes are flattened to one axis ``M`` and tiled by ``block_m`` — see
+    ``vmem_bytes`` / ``cp_vmem_bytes`` for the per-step VMEM working set and
+    ``pick_block_m`` for budget-driven tile selection;
+  * channels (I, O) and CP ranks are contracted with
     ``preferred_element_type=float32`` so accumulation never happens in
-    half precision — only *storage* is half, which is precisely the error
-    model of Theorem 3.2;
+    half precision — only *storage* is half;
   * the 4-multiply complex product (rr−ii, ri+ir) is used rather than
     Karatsuba 3-mult: on the MXU the extra multiply is free relative to
     the added adds/temporaries of the 3-mult form.
 
-Validated against ``ref.spectral_contract_ref`` in interpret mode on CPU
-(see tests/test_kernels.py); on TPU the same code path compiles natively.
+Validated against ``ref.spectral_contract_ref`` / ``spectral_contract_cp_ref``
+in interpret mode on CPU (tests/test_kernels.py, tests/test_kernels_diff.py);
+on TPU the same code path compiles natively.
 """
 from __future__ import annotations
 
@@ -31,8 +59,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+#: VMEM per TPU core (v5e-class) — the budget ``pick_block_m`` packs under.
+VMEM_BUDGET = 16 * 2 ** 20
 
-def _kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    """Accumulator dtype: f32 everywhere except under an x64 gradcheck."""
+    return jnp.float64 if jnp.dtype(dtype) == jnp.float64 else jnp.float32
+
+
+def _pad_modes(a: jnp.ndarray, block_m: int) -> jnp.ndarray:
+    pad = (-a.shape[-1]) % block_m
+    if not pad:
+        return a
+    return jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+
+
+# ---------------------------------------------------------------------------
+# Dense kernels: forward + the two backward contractions
+# ---------------------------------------------------------------------------
+
+
+def _dense_fwd_kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
     """One mode-tile step: batched (over modes) complex matmul.
 
     Refs (VMEM tiles):
@@ -40,6 +88,7 @@ def _kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
     """
     xr, xi = xr_ref[...], xi_ref[...]
     wr, wi = wr_ref[...], wi_ref[...]
+    acc = _acc_dtype(xr.dtype)
 
     def bmm(a, b):
         # contract I; batch over the mode tile axis (last axis of both).
@@ -48,17 +97,132 @@ def _kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
             a,
             b,
             dimension_numbers=(((1,), (0,)), ((2,), (2,))),
-            preferred_element_type=jnp.float32,
+            preferred_element_type=acc,
         )
 
     rr = bmm(xr, wr)
     ii = bmm(xi, wi)
     ri = bmm(xr, wi)
     ir = bmm(xi, wr)
-    out_re = jnp.transpose(rr - ii, (1, 2, 0))
-    out_im = jnp.transpose(ri + ir, (1, 2, 0))
-    or_ref[...] = out_re.astype(or_ref.dtype)
-    oi_ref[...] = out_im.astype(oi_ref.dtype)
+    or_ref[...] = jnp.transpose(rr - ii, (1, 2, 0)).astype(or_ref.dtype)
+    oi_ref[...] = jnp.transpose(ri + ir, (1, 2, 0)).astype(oi_ref.dtype)
+
+
+def _dense_bwd_x_kernel(gr_ref, gi_ref, wr_ref, wi_ref, dxr_ref, dxi_ref):
+    """dx = g · conj(w): contract O per mode tile.
+
+    Refs: gr/gi (B, O, TM), wr/wi (I, O, TM) -> dxr/dxi (B, I, TM).
+    Split-real: dxr = Σ_o gr·wr + gi·wi ; dxi = Σ_o gi·wr − gr·wi.
+    """
+    gr, gi = gr_ref[...], gi_ref[...]
+    wr, wi = wr_ref[...], wi_ref[...]
+    acc = _acc_dtype(gr.dtype)
+
+    def bmm(a, b):
+        # (B,O,TM) x (I,O,TM): contract O, batch TM -> (TM, B, I)
+        return jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((2,), (2,))), preferred_element_type=acc
+        )
+
+    dxr = bmm(gr, wr) + bmm(gi, wi)
+    dxi = bmm(gi, wr) - bmm(gr, wi)
+    dxr_ref[...] = jnp.transpose(dxr, (1, 2, 0)).astype(dxr_ref.dtype)
+    dxi_ref[...] = jnp.transpose(dxi, (1, 2, 0)).astype(dxi_ref.dtype)
+
+
+def _dense_bwd_w_kernel(xr_ref, xi_ref, gr_ref, gi_ref, dwr_ref, dwi_ref):
+    """dw = conj(x) · g: contract B per mode tile.
+
+    Refs: xr/xi (B, I, TM), gr/gi (B, O, TM) -> dwr/dwi (I, O, TM).
+    Split-real: dwr = Σ_b xr·gr + xi·gi ; dwi = Σ_b xr·gi − xi·gr.
+    """
+    xr, xi = xr_ref[...], xi_ref[...]
+    gr, gi = gr_ref[...], gi_ref[...]
+    acc = _acc_dtype(xr.dtype)
+
+    def bmm(a, b):
+        # (B,I,TM) x (B,O,TM): contract B, batch TM -> (TM, I, O)
+        return jax.lax.dot_general(
+            a, b, (((0,), (0,)), ((2,), (2,))), preferred_element_type=acc
+        )
+
+    dwr = bmm(xr, gr) + bmm(xi, gi)
+    dwi = bmm(xr, gi) - bmm(xi, gr)
+    dwr_ref[...] = jnp.transpose(dwr, (1, 2, 0)).astype(dwr_ref.dtype)
+    dwi_ref[...] = jnp.transpose(dwi, (1, 2, 0)).astype(dwi_ref.dtype)
+
+
+def _dense_call(kernel, a_specs, out_specs, out_shapes, grid, interpret, *args):
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=a_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*args)
+
+
+def _x_spec(B, I, block_m):
+    return pl.BlockSpec((B, I, block_m), lambda m: (0, 0, m))
+
+
+def _dense_fwd_call(config, xr, xi, wr, wi):
+    block_m, interpret, out_dtype = config
+    B, I, M = xr.shape
+    _, O, _ = wr.shape
+    xr, xi, wr, wi = (_pad_modes(a, block_m) for a in (xr, xi, wr, wi))
+    Mp = xr.shape[-1]
+    out_re, out_im = _dense_call(
+        _dense_fwd_kernel,
+        [_x_spec(B, I, block_m)] * 2 + [_x_spec(I, O, block_m)] * 2,
+        [_x_spec(B, O, block_m)] * 2,
+        [jax.ShapeDtypeStruct((B, O, Mp), out_dtype)] * 2,
+        (Mp // block_m,),
+        interpret,
+        xr, xi, wr, wi,
+    )
+    return out_re[..., :M], out_im[..., :M]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dense_op(config, xr, xi, wr, wi):
+    return _dense_fwd_call(config, xr, xi, wr, wi)
+
+
+def _dense_op_fwd(config, xr, xi, wr, wi):
+    return _dense_fwd_call(config, xr, xi, wr, wi), (xr, xi, wr, wi)
+
+
+def _dense_op_bwd(config, res, cts):
+    xr, xi, wr, wi = res
+    gr, gi = cts
+    block_m, interpret, _ = config
+    B, I, M = xr.shape
+    _, O, _ = wr.shape
+    grp, gip = _pad_modes(gr, block_m), _pad_modes(gi, block_m)
+    wrp, wip = _pad_modes(wr, block_m), _pad_modes(wi, block_m)
+    xrp, xip = _pad_modes(xr, block_m), _pad_modes(xi, block_m)
+    Mp = grp.shape[-1]
+    grid = (Mp // block_m,)
+    dxr, dxi = _dense_call(
+        _dense_bwd_x_kernel,
+        [_x_spec(B, O, block_m)] * 2 + [_x_spec(I, O, block_m)] * 2,
+        [_x_spec(B, I, block_m)] * 2,
+        [jax.ShapeDtypeStruct((B, I, Mp), xr.dtype)] * 2,
+        grid, interpret, grp, gip, wrp, wip,
+    )
+    dwr, dwi = _dense_call(
+        _dense_bwd_w_kernel,
+        [_x_spec(B, I, block_m)] * 2 + [_x_spec(B, O, block_m)] * 2,
+        [_x_spec(I, O, block_m)] * 2,
+        [jax.ShapeDtypeStruct((I, O, Mp), wr.dtype)] * 2,
+        grid, interpret, xrp, xip, grp, gip,
+    )
+    return (dxr[..., :M], dxi[..., :M], dwr[..., :M], dwi[..., :M])
+
+
+_dense_op.defvjp(_dense_op_fwd, _dense_op_bwd)
 
 
 @functools.partial(
@@ -74,7 +238,7 @@ def spectral_contract_pallas(
     interpret: bool = True,
     out_dtype=None,
 ) -> tuple:
-    """Split-real complex contraction ``bim,iom->bom``.
+    """Split-real complex contraction ``bim,iom->bom`` (differentiable).
 
     Args:
       xr/xi: (B, I, M) half (or f32) real/imag parts of the spectrum tile.
@@ -84,47 +248,491 @@ def spectral_contract_pallas(
         pass False to compile to Mosaic.
 
     Returns (out_re, out_im): (B, O, M) at ``out_dtype`` (default: x dtype).
+    Reverse-mode differentiation runs the two backward Pallas kernels
+    (``dL/dx = g·w̄``, ``dL/dw = x̄·g``) on the same mode tiling.
     """
     B, I, M = xr.shape
     I2, O, M2 = wr.shape
-    assert I == I2 and M == M2, (xr.shape, wr.shape)
-    out_dtype = out_dtype or xr.dtype
+    if I != I2 or M != M2:
+        raise ValueError(
+            f"spectral_contract_pallas: x {xr.shape} vs w {wr.shape} — "
+            f"expected (B, I, M) and (I, O, M) with matching I and M"
+        )
+    out_dtype = jnp.dtype(out_dtype or xr.dtype)
+    return _dense_op((block_m, interpret, out_dtype), xr, xi, wr, wi)
 
-    # pad modes to a multiple of block_m
-    pad = (-M) % block_m
-    if pad:
-        xr = jnp.pad(xr, ((0, 0), (0, 0), (0, pad)))
-        xi = jnp.pad(xi, ((0, 0), (0, 0), (0, pad)))
-        wr = jnp.pad(wr, ((0, 0), (0, 0), (0, pad)))
-        wi = jnp.pad(wi, ((0, 0), (0, 0), (0, pad)))
-    Mp = M + pad
-    grid = (Mp // block_m,)
 
-    x_spec = pl.BlockSpec((B, I, block_m), lambda m: (0, 0, m))
-    w_spec = pl.BlockSpec((I, O, block_m), lambda m: (0, 0, m))
-    o_spec = pl.BlockSpec((B, O, block_m), lambda m: (0, 0, m))
+# ---------------------------------------------------------------------------
+# CP-factorised kernels (TFNO): project -> mode-scale -> expand per tile
+# ---------------------------------------------------------------------------
 
-    out_shape = [
-        jax.ShapeDtypeStruct((B, O, Mp), out_dtype),
-        jax.ShapeDtypeStruct((B, O, Mp), out_dtype),
-    ]
+
+def _cp_fwd_stages(xr, xi, uir, uii, uor, uoi, wr, wi, acc):
+    """The three factorised stages at the accumulator dtype; returns
+    (tr, ti, ur, ui, our, oui) so the backward can reuse t and u."""
+
+    def dg(a, b, dims):
+        return jax.lax.dot_general(a, b, (dims, ((), ())),
+                                   preferred_element_type=acc)
+
+    # rank-project: t[b,m,r] = Σ_i x[b,i,m] Ui[i,r]
+    d_t = ((1,), (0,))
+    tr = dg(xr, uir, d_t) - dg(xi, uii, d_t)
+    ti = dg(xr, uii, d_t) + dg(xi, uir, d_t)
+    # mode-scale: u[b,m,r] = t[b,m,r] · W[r,m]
+    wrT = jnp.transpose(wr, (1, 0)).astype(acc)[None]
+    wiT = jnp.transpose(wi, (1, 0)).astype(acc)[None]
+    ur = tr * wrT - ti * wiT
+    ui = tr * wiT + ti * wrT
+    # rank-expand: o[b,m,o] = Σ_r u[b,m,r] Uo[o,r]
+    d_o = ((2,), (1,))
+    our = dg(ur, uor, d_o) - dg(ui, uoi, d_o)
+    oui = dg(ur, uoi, d_o) + dg(ui, uor, d_o)
+    return tr, ti, ur, ui, our, oui
+
+
+def _cp_fwd_kernel(xr_ref, xi_ref, uir_ref, uii_ref, uor_ref, uoi_ref,
+                   wr_ref, wi_ref, or_ref, oi_ref):
+    """Refs: x (B,I,TM), Ui (I,R), Uo (O,R), W (R,TM) -> out (B,O,TM)."""
+    acc = _acc_dtype(xr_ref.dtype)
+    _, _, _, _, our, oui = _cp_fwd_stages(
+        xr_ref[...], xi_ref[...], uir_ref[...], uii_ref[...],
+        uor_ref[...], uoi_ref[...], wr_ref[...], wi_ref[...], acc,
+    )
+    or_ref[...] = jnp.transpose(our, (0, 2, 1)).astype(or_ref.dtype)
+    oi_ref[...] = jnp.transpose(oui, (0, 2, 1)).astype(oi_ref.dtype)
+
+
+def _cp_bwd_kernel(xr_ref, xi_ref, uir_ref, uii_ref, uor_ref, uoi_ref,
+                   wr_ref, wi_ref, gr_ref, gi_ref,
+                   dxr_ref, dxi_ref, duir_ref, duii_ref,
+                   duor_ref, duoi_ref, dwr_ref, dwi_ref):
+    """Full CP backward for one mode tile.
+
+    Recomputes t,u (cheaper than storing rank-space residuals in HBM),
+    then:  du = g·Ūo,  dUo += g·ū,  dt = du·W̄,  dW = Σ_b du·t̄,
+           dx = dt·Ūi,  dUi += x̄·dt.
+    The mode-independent dUi/dUo blocks revisit across the (sequential)
+    grid and accumulate in place at f32.
+    """
+    xr, xi = xr_ref[...], xi_ref[...]
+    uir, uii = uir_ref[...], uii_ref[...]
+    uor, uoi = uor_ref[...], uoi_ref[...]
+    wr, wi = wr_ref[...], wi_ref[...]
+    gr, gi = gr_ref[...], gi_ref[...]
+    acc = _acc_dtype(xr.dtype)
+
+    def dg(a, b, dims):
+        return jax.lax.dot_general(a, b, (dims, ((), ())),
+                                   preferred_element_type=acc)
+
+    tr, ti, ur, ui, _, _ = _cp_fwd_stages(
+        xr, xi, uir, uii, uor, uoi, wr, wi, acc)
+
+    # du[b,m,r] = Σ_o g[b,o,m]·conj(Uo[o,r])
+    d_du = ((1,), (0,))
+    dur = dg(gr, uor, d_du) + dg(gi, uoi, d_du)
+    dui = dg(gi, uor, d_du) - dg(gr, uoi, d_du)
+    # dUo[o,r] = Σ_{b,m} g[b,o,m]·conj(u[b,m,r])   (accumulated over tiles)
+    d_bm = ((0, 2), (0, 1))
+    duor = dg(gr, ur, d_bm) + dg(gi, ui, d_bm)
+    duoi = dg(gi, ur, d_bm) - dg(gr, ui, d_bm)
+    # dt = du·conj(W)
+    wrT = jnp.transpose(wr, (1, 0)).astype(acc)[None]
+    wiT = jnp.transpose(wi, (1, 0)).astype(acc)[None]
+    dtr = dur * wrT + dui * wiT
+    dti = dui * wrT - dur * wiT
+    # dW[r,m] = Σ_b du[b,m,r]·conj(t[b,m,r])   (per-tile block)
+    dwr = jnp.sum(dur * tr + dui * ti, axis=0)
+    dwi = jnp.sum(dui * tr - dur * ti, axis=0)
+    dwr_ref[...] = jnp.transpose(dwr, (1, 0)).astype(dwr_ref.dtype)
+    dwi_ref[...] = jnp.transpose(dwi, (1, 0)).astype(dwi_ref.dtype)
+    # dx[b,i,m] = Σ_r dt[b,m,r]·conj(Ui[i,r])
+    d_dx = ((2,), (1,))
+    dxr = dg(dtr, uir, d_dx) + dg(dti, uii, d_dx)
+    dxi = dg(dti, uir, d_dx) - dg(dtr, uii, d_dx)
+    dxr_ref[...] = jnp.transpose(dxr, (0, 2, 1)).astype(dxr_ref.dtype)
+    dxi_ref[...] = jnp.transpose(dxi, (0, 2, 1)).astype(dxi_ref.dtype)
+    # dUi[i,r] = Σ_{b,m} conj(x[b,i,m])·dt[b,m,r]   (accumulated over tiles)
+    duir = dg(xr, dtr, d_bm) + dg(xi, dti, d_bm)
+    duii = dg(xr, dti, d_bm) - dg(xi, dtr, d_bm)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        for ref in (duir_ref, duii_ref, duor_ref, duoi_ref):
+            ref[...] = jnp.zeros(ref.shape, ref.dtype)
+
+    duir_ref[...] += duir.astype(duir_ref.dtype)
+    duii_ref[...] += duii.astype(duii_ref.dtype)
+    duor_ref[...] += duor.astype(duor_ref.dtype)
+    duoi_ref[...] += duoi.astype(duoi_ref.dtype)
+
+
+def _cp_specs(B, I, O, R, block_m):
+    x = _x_spec(B, I, block_m)
+    ui = pl.BlockSpec((I, R), lambda m: (0, 0))
+    uo = pl.BlockSpec((O, R), lambda m: (0, 0))
+    w = pl.BlockSpec((R, block_m), lambda m: (0, m))
+    return x, ui, uo, w
+
+
+def _cp_fwd_call(config, xr, xi, uir, uii, uor, uoi, wr, wi):
+    block_m, interpret, out_dtype = config
+    B, I, M = xr.shape
+    O, R = uor.shape
+    xr, xi, wr, wi = (_pad_modes(a, block_m) for a in (xr, xi, wr, wi))
+    Mp = xr.shape[-1]
+    x_s, ui_s, uo_s, w_s = _cp_specs(B, I, O, R, block_m)
     out_re, out_im = pl.pallas_call(
-        _kernel,
-        grid=grid,
-        in_specs=[x_spec, x_spec, w_spec, w_spec],
-        out_specs=[o_spec, o_spec],
-        out_shape=out_shape,
+        _cp_fwd_kernel,
+        grid=(Mp // block_m,),
+        in_specs=[x_s, x_s, ui_s, ui_s, uo_s, uo_s, w_s, w_s],
+        out_specs=[_x_spec(B, O, block_m)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((B, O, Mp), out_dtype)] * 2,
+        interpret=interpret,
+    )(xr, xi, uir, uii, uor, uoi, wr, wi)
+    return out_re[..., :M], out_im[..., :M]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cp_op(config, xr, xi, uir, uii, uor, uoi, wr, wi):
+    return _cp_fwd_call(config, xr, xi, uir, uii, uor, uoi, wr, wi)
+
+
+def _cp_op_fwd(config, xr, xi, uir, uii, uor, uoi, wr, wi):
+    out = _cp_fwd_call(config, xr, xi, uir, uii, uor, uoi, wr, wi)
+    return out, (xr, xi, uir, uii, uor, uoi, wr, wi)
+
+
+def _cp_op_bwd(config, res, cts):
+    xr, xi, uir, uii, uor, uoi, wr, wi = res
+    gr, gi = cts
+    block_m, interpret, _ = config
+    B, I, M = xr.shape
+    O, R = uor.shape
+    acc = _acc_dtype(xr.dtype)
+    xrp, xip, wrp, wip, grp, gip = (
+        _pad_modes(a, block_m) for a in (xr, xi, wr, wi, gr, gi))
+    Mp = xrp.shape[-1]
+    x_s, ui_s, uo_s, w_s = _cp_specs(B, I, O, R, block_m)
+    outs = pl.pallas_call(
+        _cp_bwd_kernel,
+        grid=(Mp // block_m,),
+        in_specs=[x_s, x_s, ui_s, ui_s, uo_s, uo_s, w_s, w_s,
+                  _x_spec(B, O, block_m), _x_spec(B, O, block_m)],
+        out_specs=[x_s, x_s, ui_s, ui_s, uo_s, uo_s, w_s, w_s],
+        out_shape=(
+            [jax.ShapeDtypeStruct((B, I, Mp), xr.dtype)] * 2
+            # factor grads accumulate across revisited blocks at the
+            # accumulator dtype; cast back to the primal dtype below
+            + [jax.ShapeDtypeStruct((I, R), acc)] * 2
+            + [jax.ShapeDtypeStruct((O, R), acc)] * 2
+            + [jax.ShapeDtypeStruct((R, Mp), wr.dtype)] * 2
+        ),
+        interpret=interpret,
+    )(xrp, xip, uir, uii, uor, uoi, wrp, wip, grp, gip)
+    dxr, dxi, duir, duii, duor, duoi, dwr, dwi = outs
+    return (
+        dxr[..., :M], dxi[..., :M],
+        duir.astype(uir.dtype), duii.astype(uii.dtype),
+        duor.astype(uor.dtype), duoi.astype(uoi.dtype),
+        dwr[..., :M], dwi[..., :M],
+    )
+
+
+_cp_op.defvjp(_cp_op_fwd, _cp_op_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "interpret", "out_dtype")
+)
+def spectral_contract_cp_pallas(
+    xr: jnp.ndarray,
+    xi: jnp.ndarray,
+    uir: jnp.ndarray,
+    uii: jnp.ndarray,
+    uor: jnp.ndarray,
+    uoi: jnp.ndarray,
+    wr: jnp.ndarray,
+    wi: jnp.ndarray,
+    *,
+    block_m: int = 64,
+    interpret: bool = True,
+    out_dtype=None,
+) -> tuple:
+    """CP-factorised split-real contraction (differentiable).
+
+    ``out[b,o,m] = Σ_r (Σ_i x[b,i,m]·Ui[i,r]) · W[r,m] · Uo[o,r]``
+
+    Args:
+      xr/xi: (B, I, M) spectrum tile;  uir/uii: (I, R) input factor;
+      uor/uoi: (O, R) output factor;   wr/wi: (R, M) combined mode factor
+      (λ and the per-axis CP factors folded together by the caller).
+
+    Returns (out_re, out_im): (B, O, M) at ``out_dtype`` (default x dtype).
+    """
+    B, I, M = xr.shape
+    I2, R = uir.shape
+    O, R2 = uor.shape
+    R3, M2 = wr.shape
+    if I != I2 or R != R2 or R != R3 or M != M2:
+        raise ValueError(
+            f"spectral_contract_cp_pallas: inconsistent factor shapes "
+            f"x {xr.shape}, Ui {uir.shape}, Uo {uor.shape}, W {wr.shape}"
+        )
+    out_dtype = jnp.dtype(out_dtype or xr.dtype)
+    return _cp_op((block_m, interpret, out_dtype), xr, xi, uir, uii,
+                  uor, uoi, wr, wi)
+
+
+# ---------------------------------------------------------------------------
+# l-shared kernels (SFNO): weight shared over order m, tiled over degree l
+# ---------------------------------------------------------------------------
+#
+#   out[b,o,l,m] = Σ_i x[b,i,l,m] · w[i,o,l]
+#
+# The spherical convolution theorem shares the weight across orders m, so
+# materialising it as a dense (I, O, l, m) operand for the dense kernel
+# would stream mmax× the weight bytes (and materialise an mmax× gradient
+# before reduction).  These kernels instead tile over *degrees l* and ride
+# m along as a free axis; the weight tile stays (I, O, TL).
+
+
+def _lshared_fwd_kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
+    """Refs: x (B, I, TL, M), w (I, O, TL) -> out (B, O, TL, M)."""
+    xr, xi = xr_ref[...], xi_ref[...]
+    wr, wi = wr_ref[...], wi_ref[...]
+    acc = _acc_dtype(xr.dtype)
+
+    def bmm(a, b):
+        # contract I; batch over the degree tile -> (TL, B, M, O)
+        return jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((2,), (2,))), preferred_element_type=acc)
+
+    our = bmm(xr, wr) - bmm(xi, wi)
+    oui = bmm(xr, wi) + bmm(xi, wr)
+    or_ref[...] = jnp.transpose(our, (1, 3, 0, 2)).astype(or_ref.dtype)
+    oi_ref[...] = jnp.transpose(oui, (1, 3, 0, 2)).astype(oi_ref.dtype)
+
+
+def _lshared_bwd_x_kernel(gr_ref, gi_ref, wr_ref, wi_ref, dxr_ref, dxi_ref):
+    """dx = g · conj(w): g (B, O, TL, M), w (I, O, TL) -> dx (B, I, TL, M)."""
+    gr, gi = gr_ref[...], gi_ref[...]
+    wr, wi = wr_ref[...], wi_ref[...]
+    acc = _acc_dtype(gr.dtype)
+
+    def bmm(a, b):
+        # contract O; batch TL -> (TL, B, M, I)
+        return jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((2,), (2,))), preferred_element_type=acc)
+
+    dxr = bmm(gr, wr) + bmm(gi, wi)
+    dxi = bmm(gi, wr) - bmm(gr, wi)
+    dxr_ref[...] = jnp.transpose(dxr, (1, 3, 0, 2)).astype(dxr_ref.dtype)
+    dxi_ref[...] = jnp.transpose(dxi, (1, 3, 0, 2)).astype(dxi_ref.dtype)
+
+
+def _lshared_bwd_w_kernel(xr_ref, xi_ref, gr_ref, gi_ref, dwr_ref, dwi_ref):
+    """dw = conj(x) · g summed over b AND m: -> dw (I, O, TL).  The m
+    reduction happens in-tile, so the (I, O, l, m) intermediate the dense
+    path would materialise never exists."""
+    xr, xi = xr_ref[...], xi_ref[...]
+    gr, gi = gr_ref[...], gi_ref[...]
+    acc = _acc_dtype(xr.dtype)
+
+    def bmm(a, b):
+        # contract (B, M); batch TL -> (TL, I, O)
+        return jax.lax.dot_general(
+            a, b, (((0, 3), (0, 3)), ((2,), (2,))),
+            preferred_element_type=acc)
+
+    dwr = bmm(xr, gr) + bmm(xi, gi)
+    dwi = bmm(xr, gi) - bmm(xi, gr)
+    dwr_ref[...] = jnp.transpose(dwr, (1, 2, 0)).astype(dwr_ref.dtype)
+    dwi_ref[...] = jnp.transpose(dwi, (1, 2, 0)).astype(dwi_ref.dtype)
+
+
+def _pad_l(a: jnp.ndarray, block_l: int, axis: int) -> jnp.ndarray:
+    pad = (-a.shape[axis]) % block_l
+    if not pad:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _lshared_specs(B, I, O, Mm, block_l):
+    x = pl.BlockSpec((B, I, block_l, Mm), lambda l: (0, 0, l, 0))
+    g = pl.BlockSpec((B, O, block_l, Mm), lambda l: (0, 0, l, 0))
+    w = pl.BlockSpec((I, O, block_l), lambda l: (0, 0, l))
+    return x, g, w
+
+
+def _lshared_fwd_call(config, xr, xi, wr, wi):
+    block_l, interpret, out_dtype = config
+    B, I, L, Mm = xr.shape
+    _, O, _ = wr.shape
+    xr, xi = _pad_l(xr, block_l, 2), _pad_l(xi, block_l, 2)
+    wr, wi = _pad_l(wr, block_l, 2), _pad_l(wi, block_l, 2)
+    Lp = xr.shape[2]
+    x_s, g_s, w_s = _lshared_specs(B, I, O, Mm, block_l)
+    out_re, out_im = pl.pallas_call(
+        _lshared_fwd_kernel,
+        grid=(Lp // block_l,),
+        in_specs=[x_s, x_s, w_s, w_s],
+        out_specs=[g_s, g_s],
+        out_shape=[jax.ShapeDtypeStruct((B, O, Lp, Mm), out_dtype)] * 2,
         interpret=interpret,
     )(xr, xi, wr, wi)
-    if pad:
-        out_re = out_re[..., :M]
-        out_im = out_im[..., :M]
-    return out_re, out_im
+    return out_re[:, :, :L], out_im[:, :, :L]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _lshared_op(config, xr, xi, wr, wi):
+    return _lshared_fwd_call(config, xr, xi, wr, wi)
+
+
+def _lshared_op_fwd(config, xr, xi, wr, wi):
+    return _lshared_fwd_call(config, xr, xi, wr, wi), (xr, xi, wr, wi)
+
+
+def _lshared_op_bwd(config, res, cts):
+    xr, xi, wr, wi = res
+    gr, gi = cts
+    block_l, interpret, _ = config
+    B, I, L, Mm = xr.shape
+    _, O, _ = wr.shape
+    xrp, xip = _pad_l(xr, block_l, 2), _pad_l(xi, block_l, 2)
+    wrp, wip = _pad_l(wr, block_l, 2), _pad_l(wi, block_l, 2)
+    grp, gip = _pad_l(gr, block_l, 2), _pad_l(gi, block_l, 2)
+    Lp = xrp.shape[2]
+    grid = (Lp // block_l,)
+    x_s, g_s, w_s = _lshared_specs(B, I, O, Mm, block_l)
+    dxr, dxi = pl.pallas_call(
+        _lshared_bwd_x_kernel,
+        grid=grid,
+        in_specs=[g_s, g_s, w_s, w_s],
+        out_specs=[x_s, x_s],
+        out_shape=[jax.ShapeDtypeStruct((B, I, Lp, Mm), xr.dtype)] * 2,
+        interpret=interpret,
+    )(grp, gip, wrp, wip)
+    dwr, dwi = pl.pallas_call(
+        _lshared_bwd_w_kernel,
+        grid=grid,
+        in_specs=[x_s, x_s, g_s, g_s],
+        out_specs=[w_s, w_s],
+        out_shape=[jax.ShapeDtypeStruct((I, O, Lp), wr.dtype)] * 2,
+        interpret=interpret,
+    )(xrp, xip, grp, gip)
+    return (dxr[:, :, :L], dxi[:, :, :L], dwr[:, :, :L], dwi[:, :, :L])
+
+
+_lshared_op.defvjp(_lshared_op_fwd, _lshared_op_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_l", "interpret", "out_dtype")
+)
+def spectral_contract_lshared_pallas(
+    xr: jnp.ndarray,
+    xi: jnp.ndarray,
+    wr: jnp.ndarray,
+    wi: jnp.ndarray,
+    *,
+    block_l: int = 8,
+    interpret: bool = True,
+    out_dtype=None,
+) -> tuple:
+    """Split-real ``bilm,iol->bolm`` with the weight shared over m
+    (differentiable; the SFNO spherical contraction).
+
+    xr/xi: (B, I, L, M) spectrum; wr/wi: (I, O, L) per-degree weights.
+    Returns (out_re, out_im): (B, O, L, M) at ``out_dtype``.
+    """
+    B, I, L, Mm = xr.shape
+    I2, O, L2 = wr.shape
+    if I != I2 or L != L2:
+        raise ValueError(
+            f"spectral_contract_lshared_pallas: x {xr.shape} vs w "
+            f"{wr.shape} — expected (B, I, L, M) and (I, O, L)"
+        )
+    out_dtype = jnp.dtype(out_dtype or xr.dtype)
+    return _lshared_op((block_l, interpret, out_dtype), xr, xi, wr, wi)
+
+
+# ---------------------------------------------------------------------------
+# VMEM budgeting
+# ---------------------------------------------------------------------------
 
 
 def vmem_bytes(B: int, I: int, O: int, block_m: int, itemsize: int = 2) -> int:
-    """VMEM working set per grid step — used to pick block_m so the tile
-    fits comfortably under the ~16 MiB v5e VMEM budget."""
+    """Forward VMEM working set per grid step — used to pick block_m so
+    the tile fits comfortably under the ~16 MiB v5e VMEM budget."""
     halves = (B * I + I * O + B * O) * block_m * 2  # re+im
     accum = B * O * block_m * 4  # f32 accumulators
     return halves * itemsize + accum
+
+
+def vmem_bytes_bwd(B: int, I: int, O: int, block_m: int,
+                   itemsize: int = 2) -> int:
+    """Backward VMEM working set per grid step: the larger of the dx
+    kernel (g, w tiles + f32 dx accumulators) and the dw kernel (x, g
+    tiles + f32 dw accumulators)."""
+    bwd_x = (B * O + I * O + B * I) * block_m * 2 * itemsize \
+        + B * I * block_m * 4
+    bwd_w = (B * I + B * O + I * O) * block_m * 2 * itemsize \
+        + I * O * block_m * 4
+    return max(bwd_x, bwd_w)
+
+
+def cp_vmem_bytes(B: int, I: int, O: int, R: int, block_m: int,
+                  itemsize: int = 2) -> int:
+    """CP kernel VMEM working set per grid step (backward dominates: it
+    holds x, g, W tiles, both rank factors, the recomputed t/u and the
+    f32 gradient accumulators)."""
+    tiles = (B * I + B * O + R) * block_m * 2 * itemsize   # x, g, W
+    factors = (I * R + O * R) * 2 * itemsize               # Ui, Uo
+    rankspace = 4 * B * R * block_m * 2 * 4                # t, u, du, dt (f32)
+    grads = (I * R + O * R + R * block_m + B * I * block_m) * 2 * 4
+    return tiles + factors + rankspace + grads
+
+
+def lshared_vmem_bytes(B: int, I: int, O: int, Mm: int, block_l: int,
+                       itemsize: int = 2) -> int:
+    """l-shared (SFNO) kernel VMEM working set per grid step (the bwd-dx
+    step, which holds g, w tiles and the f32 dx accumulator, dominates)."""
+    tiles = ((B * I + B * O) * Mm + I * O) * block_l * 2 * itemsize
+    accum = max(B * I, B * O) * block_l * Mm * 4
+    return tiles + accum
+
+
+def pick_block_l(B: int, I: int, O: int, L: int, Mm: int, *,
+                 itemsize: int = 2, budget: int = VMEM_BUDGET // 2) -> int:
+    """Largest power-of-two degree tile fitting the l-shared kernel's
+    working set under ``budget`` bytes of VMEM."""
+    for bl in (256, 128, 64, 32, 16, 8, 4, 2):
+        if bl > max(L, 2):
+            continue
+        if lshared_vmem_bytes(B, I, O, Mm, bl, itemsize) <= budget:
+            return bl
+    return 1
+
+
+def pick_block_m(B: int, I: int, O: int, M: int, *, rank: int = 0,
+                 itemsize: int = 2, budget: int = VMEM_BUDGET // 2,
+                 train: bool = True) -> int:
+    """Largest power-of-two mode tile whose fwd (and, for ``train``, bwd)
+    working set fits in ``budget`` bytes of VMEM.  ``rank > 0`` budgets
+    the CP kernel instead of the dense one."""
+    for bm in (512, 256, 128, 64, 32, 16, 8):
+        if bm > max(M, 8):
+            continue
+        if rank:
+            need = cp_vmem_bytes(B, I, O, rank, bm, itemsize)
+        else:
+            need = vmem_bytes(B, I, O, bm, itemsize)
+            if train:
+                need = max(need, vmem_bytes_bwd(B, I, O, bm, itemsize))
+        if need <= budget:
+            return bm
+    return 8

@@ -29,7 +29,7 @@ from repro.dist.sharding import fno_param_specs, pick_spec, to_named
 from repro.launch.dryrun import save_result
 from repro.launch.steps import opt_specs as _opt_specs
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import analyze_counts, parse_hlo
+from repro.launch.roofline import analyze_counts, parse_hlo, spectral_kernel_vmem
 from repro.models import fno_apply, init_fno, init_sfno, sfno_apply
 from repro.optim import AdamW
 from repro.train.losses import relative_l2
@@ -107,6 +107,22 @@ def run_fno_cell(name: str, multi_pod: bool, policy_name: str,
     counts = parse_hlo(compiled.as_text())
     n_dev = mesh.devices.size
     roof = analyze_counts(counts, n_dev)
+    # Pallas spectral-contraction tiling estimate for this cell: the
+    # full-DP layout leaves B/n_dev fields per device; dense FNO corners
+    # contract hidden->hidden over the retained modes, the SFNO over the
+    # (lmax, mmax) spherical spectrum, and CP factorisations budget the
+    # factorised kernel at the layer's CP rank.
+    h = cfg.hidden_channels
+    rank = 0
+    if getattr(cfg, "factorization", "dense") == "cp":
+        from repro.core.spectral import cp_rank
+
+        rank = cp_rank(h, h, cfg.rank)
+    kmodes = cfg.modes if spec["kind"] == "fno" else (cfg.lmax, cfg.mmax)
+    itemsize = 2 if policy.spectral_is_half else 4
+    rec["spectral_kernel"] = spectral_kernel_vmem(
+        max(1, B // n_dev), h, h, kmodes, rank=rank,
+        l_shared=spec["kind"] == "sfno", itemsize=itemsize)
     rec.update({
         "status": "ok",
         "compile_s": round(time.time() - t0, 1),

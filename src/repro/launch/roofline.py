@@ -89,3 +89,49 @@ def analyze_counts(counts: HLOCounts, n_devices: int) -> Roofline:
 def model_flops(n_params_active: float, tokens: float) -> float:
     """6·N·D napkin-math (per the assignment: N_active for MoE)."""
     return 6.0 * n_params_active * tokens
+
+
+def spectral_kernel_vmem(B: int, I: int, O: int, modes, *, rank: int = 0,
+                         l_shared: bool = False,
+                         itemsize: int = 2) -> dict:
+    """Tiling record for the Pallas spectral-contraction kernel at one
+    dry-run cell: the budget-chosen tile and the fwd/bwd VMEM working
+    sets it implies — dense when ``rank == 0``, CP otherwise, or the
+    SFNO l-shared kernel when ``l_shared`` (then ``modes = (lmax, mmax)``
+    and the tile runs over degrees).  The wrappers resolve the same
+    ``pick_block_*`` choice at run time, so this record describes the
+    tiling that actually executes.  Dry-runs attach it next to the
+    roofline so a cell that would spill VMEM is visible without
+    compiling for real hardware."""
+    from repro.kernels.ops import (
+        cp_vmem_bytes, lshared_vmem_bytes, pick_block_l, pick_block_m,
+        vmem_bytes, vmem_bytes_bwd)
+    from repro.kernels.spectral_contract import VMEM_BUDGET
+
+    if l_shared:
+        L, Mm = (int(m) for m in modes)
+        bl = pick_block_l(B, I, O, L, Mm, itemsize=itemsize)
+        fwd = bwd = lshared_vmem_bytes(B, I, O, Mm, bl, itemsize)
+        tile, n_tiled, kind = bl, L, "l_shared"
+    else:
+        M = 1
+        for m in modes:
+            M *= int(m)
+        tile = pick_block_m(B, I, O, M, rank=rank, itemsize=itemsize)
+        if rank:
+            fwd = bwd = cp_vmem_bytes(B, I, O, rank, tile, itemsize)
+        else:
+            fwd = vmem_bytes(B, I, O, tile, itemsize)
+            bwd = vmem_bytes_bwd(B, I, O, tile, itemsize)
+        n_tiled, kind = M, ("cp" if rank else "dense")
+    return {
+        "kind": kind,
+        "block": tile,
+        "tiled_extent": n_tiled,
+        "grid_steps": -(-n_tiled // tile),
+        "rank": rank,
+        "itemsize": itemsize,
+        "vmem_fwd_bytes": fwd,
+        "vmem_bwd_bytes": bwd,
+        "fits_vmem": max(fwd, bwd) <= VMEM_BUDGET,
+    }

@@ -20,7 +20,7 @@ formats.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,9 @@ class FNOConfig:
     modes: Tuple[int, ...] = (16, 16)
     factorization: str = "dense"  # dense | cp | tucker  (TFNO = cp/tucker)
     rank: float = 0.5
-    use_pallas: bool = False
+    #: Tri-state: None = auto (Pallas kernels on TPU backends and under
+    #: REPRO_USE_PALLAS=1, einsum elsewhere); True/False force it.
+    use_pallas: Optional[bool] = None
     positional_embedding: bool = True  # append normalised grid coords
 
     @property

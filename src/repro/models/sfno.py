@@ -15,6 +15,7 @@ the shared site helpers, not an inline re-implementation.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,8 @@ class SFNOConfig:
     mmax: int = 32
     lifting_channels: int = 128
     projection_channels: int = 128
+    #: Tri-state like FNOConfig: None = auto (TPU / REPRO_USE_PALLAS=1).
+    use_pallas: Optional[bool] = None
 
 
 def init_sfno(key: jax.Array, cfg: SFNOConfig) -> dict:
@@ -74,7 +77,17 @@ def _spherical_conv(h, w, cfg: SFNOConfig, policy: PrecisionPolicy,
     coeffs = sht_forward(fft_in.stabilize(h).astype(jnp.float32),
                          cfg.lmax, cfg.mmax, precision=fft_in)  # (B,C,l,m)
     wc = jax.lax.complex(w["w_re"], w["w_im"])  # (i, o, l)
-    out = ctr.contract("bilm,iol->bolm", coeffs, wc)
+    from repro.kernels.ops import resolve_use_pallas
+
+    if resolve_use_pallas(cfg.use_pallas):
+        from repro.kernels import ops as kops
+
+        # the spherical weight is shared over order m (per the spherical
+        # convolution theorem): the l-shared kernel tiles over degrees
+        # and never materialises the dense (i, o, l, m) weight
+        out = kops.spectral_contract_lshared(coeffs, wc, policy=ctr)
+    else:
+        out = ctr.contract("bilm,iol->bolm", coeffs, wc)
     if isinstance(out, ComplexPair):
         out = out.to_complex()
     y = sht_inverse(out.astype(jnp.complex64), cfg.nlat, cfg.nlon)

@@ -75,6 +75,7 @@ class OperatorEngine(EngineBase):
         telemetry: bool = False,
         autoprec=None,
         autoprec_every: int = 4,
+        use_pallas: Optional[bool] = None,
     ):
         if model not in ("fno", "sfno"):
             raise ValueError(f"model must be 'fno' or 'sfno', got {model!r}")
@@ -88,7 +89,14 @@ class OperatorEngine(EngineBase):
             max_batch,
         )
         self.params = params
-        self.cfg = cfg
+        # serving-side Pallas toggle: an explicit engine argument beats
+        # the config's tri-state; the resolved flag is baked into every
+        # per-resolution compiled step below
+        from repro.kernels.ops import resolve_use_pallas
+
+        self.use_pallas = resolve_use_pallas(
+            use_pallas if use_pallas is not None else cfg.use_pallas)
+        self.cfg = dataclasses.replace(cfg, use_pallas=self.use_pallas)
         self.model = model
         # online auto-precision: the controller owns the policy; its
         # telemetry comes from the same taps the trainer collects
@@ -207,6 +215,7 @@ class OperatorEngine(EngineBase):
             "model": self.model,
             "max_batch": self.max_batch,
             "policy": self.policy.name,
+            "use_pallas": self.use_pallas,
             "fields_served": self._n_fields,
             "batches": self._n_batches,
             "avg_batch_fill": round(

@@ -62,6 +62,13 @@ class TrainerConfig:
     #: Collect numerics telemetry (amax / overflow / underflow taps as a
     #: functional carry of the jitted step) without a controller.
     telemetry: bool = False
+    #: Tri-state Pallas toggle threaded into the step builder: None =
+    #: auto (TPU backends / REPRO_USE_PALLAS=1).  Resolved once at
+    #: Trainer construction and passed to ``loss_fn`` when its signature
+    #: accepts a ``use_pallas`` keyword (incl. ``**kwargs``) —
+    #: model-agnostic loss closures that bake the flag into their config
+    #: simply ignore it.
+    use_pallas: Optional[bool] = None
 
 
 class Trainer:
@@ -98,6 +105,16 @@ class Trainer:
             from repro.autoprec import TelemetryAggregator
 
             self.telemetry = TelemetryAggregator()
+        from repro.kernels.ops import resolve_use_pallas
+
+        self._use_pallas = resolve_use_pallas(config.use_pallas)
+        import inspect
+
+        params_sig = inspect.signature(loss_fn).parameters
+        self._loss_takes_pallas = "use_pallas" in params_sig or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD
+            for p in params_sig.values()
+        )
         self._steps_cache: Dict[Any, Callable] = {}
         self._preempted = False
         self._ckptr = (
@@ -148,6 +165,13 @@ class Trainer:
         # decided by the resolved rule table (train/loss_scale site), so a
         # precision_rules override can flip it per run without a new policy
         use_scaling = loss_scaling_required(policy)
+        if self._loss_takes_pallas:
+            base_loss_fn, up = self.loss_fn, self._use_pallas
+
+            def loss_fn(p, b, pol):
+                return base_loss_fn(p, b, pol, use_pallas=up)
+        else:
+            loss_fn = self.loss_fn
 
         def micro_grads(params, batch, scale_state):
             # The telemetry collector lives *inside* the differentiated
@@ -160,10 +184,10 @@ class Trainer:
 
                     col = TraceCollector()
                     with collecting(col):
-                        loss = self.loss_fn(p, b, policy)
+                        loss = loss_fn(p, b, policy)
                     telem = col.snapshot()
                 else:
-                    loss = self.loss_fn(p, b, policy)
+                    loss = loss_fn(p, b, policy)
                     telem = {}
                 return (scale_loss(loss, scale_state) if use_scaling
                         else loss), telem

@@ -1,16 +1,37 @@
 """Test-session setup.
 
-The container may lack ``hypothesis``; the property tests only use a
-narrow slice of it (``given`` / ``settings`` / three strategies), so
-when the real package is missing we install a deterministic sampling
-shim into ``sys.modules`` before the test modules import.  The real
-package always wins when installed (CI installs it).
+Two jobs:
+
+* The container may lack ``hypothesis``; the property tests only use a
+  narrow slice of it (``given`` / ``settings`` / three strategies), so
+  when the real package is missing we install a deterministic sampling
+  shim into ``sys.modules`` before the test modules import.  The real
+  package always wins when installed (CI installs it).
+* The tier-1 CI matrix sets ``REPRO_USE_PALLAS=1`` on one leg: every
+  tri-state ``use_pallas`` default (model configs, trainer, serving)
+  then resolves to the Pallas kernels in interpret mode, so the same
+  suite locks down both spectral paths.  The env var is honoured by
+  ``repro.kernels.ops.resolve_use_pallas``; here we only surface which
+  path the session runs in the pytest header.
 """
 import functools
 import inspect
+import os
 import random
 import sys
 import types
+
+
+def pytest_report_header(config):
+    try:
+        from repro.kernels.ops import resolve_use_pallas
+
+        on = resolve_use_pallas(None)
+    except Exception:  # pragma: no cover - src not importable yet
+        on = bool(os.environ.get("REPRO_USE_PALLAS"))
+    path = "pallas" if on else "einsum"
+    return (f"repro spectral path: {path} "
+            f"(REPRO_USE_PALLAS={os.environ.get('REPRO_USE_PALLAS')!r})")
 
 try:  # pragma: no cover - prefer the real thing
     import hypothesis  # noqa: F401

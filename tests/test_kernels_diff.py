@@ -1,0 +1,432 @@
+"""Differential harness: the Pallas spectral path vs the einsum reference.
+
+This is the proof obligation for the training-grade kernel path
+(DESIGN/paper mapping: the contraction is the precision-critical site of
+Thm 3.2, so "numerically interchangeable" means *within the theorem's own
+budget*, not bitwise):
+
+  * forward: for every registry policy, random (B, I, O) including
+    non-MXU-aligned channels, 1D/2D/3D modes, dense and CP factorisations,
+    ``|pallas − einsum| ≤ n_stages · 4 ε M + c·ε_f32·M`` elementwise, where
+    ``ε`` is the policy's storage grid spacing (``SitePrecision.eps``),
+    ``M`` the contraction of operand magnitudes actually flowing through
+    the site (the empirical sup bound of Thm 3.2), ``4εM`` is
+    ``core.theory.prec_upper_bound``, one term per requantising stage of
+    the memory-greedy einsum path, plus an f32 accumulation-order term;
+  * backward: ``value_and_grad`` through ``spectral_conv_apply`` and a
+    full FNO/TFNO train step (incl. the fp16 loss-scale interaction)
+    matches the einsum path per policy, and the custom VJP passes an
+    fp64 central-difference gradcheck on a tiny dense case;
+  * edges: non-``block_m``-divisible mode counts exercise the kernel's
+    padding path, Tucker params fall back to the einsum path, and
+    non-dense operands are rejected loudly rather than silently.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FULL,
+    get_policy,
+    init_spectral_weights,
+    spectral_conv_apply,
+)
+from repro.core.precision import ComplexPair
+from repro.core.spectral import _cp_exprs, _dense_expr
+from repro.core.theory import prec_upper_bound
+from repro.kernels import ops, ref
+from repro.kernels.spectral_contract import (
+    pick_block_m,
+    spectral_contract_pallas,
+)
+from repro.models import FNOConfig, fno_apply, init_fno
+from repro.precision import POLICIES
+from repro.train import Trainer, TrainerConfig, relative_l2
+
+jax.config.update("jax_platform_name", "cpu")
+
+POLICY_NAMES = sorted(POLICIES)
+F32_EPS = float(np.finfo(np.float32).eps)
+#: one small shape per mode dimensionality (kept tiny: every case jit-
+#: compiles its own interpret-mode kernel)
+MODES_BY_NDIM = {1: (7,), 2: (3, 5), 3: (2, 3, 2)}
+
+
+def _randc(rng, shape, scale=0.5):
+    return jnp.asarray(
+        scale * (rng.randn(*shape) + 1j * rng.randn(*shape)), jnp.complex64
+    )
+
+
+def _to_np_complex(y):
+    if isinstance(y, ComplexPair):
+        y = y.to_complex()
+    return np.asarray(y)
+
+
+def _assert_within_budget(y_pallas, y_einsum, eps, mag, stages, label):
+    """|pallas − einsum| ≤ stages·4εM + 32·ε_f32·M + atol, elementwise.
+
+    ``mag`` is the contraction of operand magnitudes — the per-output
+    empirical M of Thm 3.2; each requantising stage of either path may
+    contribute up to ``prec_upper_bound(eps, M) = 4εM``.
+    """
+    budget = stages * prec_upper_bound(eps, mag) + 32 * F32_EPS * mag + 1e-5
+    diff = np.abs(_to_np_complex(y_pallas) - _to_np_complex(y_einsum))
+    worst = float((diff - budget).max())
+    assert np.all(diff <= budget), (
+        f"{label}: pallas-vs-einsum exceeds the Thm 3.2 budget by {worst:.3e}"
+        f" (max diff {diff.max():.3e}, min budget {budget.min():.3e})"
+    )
+
+
+def _diff_dense(policy_name, B, I, O, modes, seed, block_m=8):
+    policy = get_policy(policy_name)
+    site = policy.at("fno/layer0/spectral/contract")
+    rng = np.random.RandomState(seed)
+    x = _randc(rng, (B, I, *modes))
+    w = _randc(rng, (I, O, *modes))
+    y_e = site.contract(_dense_expr(len(modes)), x, w)
+    y_p = ops.spectral_contract(x, w, policy=site, block_m=block_m)
+    mag = np.einsum(
+        _dense_expr(len(modes)).replace(" ", ""), np.abs(x), np.abs(w))
+    # two requantising stages: one per path's storage rounding of the result
+    _assert_within_budget(
+        y_p, y_e, site.eps, mag, stages=2,
+        label=f"dense {policy_name} B{B} I{I} O{O} modes{modes}")
+
+
+def _diff_cp(policy_name, B, I, O, R, modes, seed, block_m=8):
+    policy = get_policy(policy_name)
+    site = policy.at("fno/layer0/spectral/contract")
+    ndim = len(modes)
+    rng = np.random.RandomState(seed)
+    x = _randc(rng, (B, I, *modes))
+    lam = _randc(rng, (R,))
+    ui = _randc(rng, (I, R))
+    uo = _randc(rng, (O, R))
+    factors = [_randc(rng, (m, R)) for m in modes]
+    expr = _cp_exprs(ndim)
+    y_e = site.contract(expr, x, lam, ui, uo, *factors)
+    y_p = ops.spectral_contract_cp(x, lam, ui, uo, factors, policy=site,
+                                   block_m=block_m)
+    mag = np.einsum(expr.replace(" ", ""), np.abs(x), np.abs(lam),
+                    np.abs(ui), np.abs(uo), *[np.abs(f) for f in factors])
+    # the memory-greedy einsum path requantises after each of its
+    # (n_operands − 1) pairwise steps; the kernel path rounds its three
+    # factorised stages — budget one 4εM term per stage on either side
+    _assert_within_budget(
+        y_p, y_e, site.eps, mag, stages=(ndim + 3) + 3,
+        label=f"cp {policy_name} B{B} I{I} O{O} R{R} modes{modes}")
+
+
+def _diff_lshared(policy_name, B, I, O, L, Mm, seed, block_l=2):
+    """The SFNO order-shared contraction ``bilm,iol->bolm``."""
+    policy = get_policy(policy_name)
+    site = policy.at("sfno/layer0/spectral/contract")
+    rng = np.random.RandomState(seed)
+    x = _randc(rng, (B, I, L, Mm))
+    w = _randc(rng, (I, O, L))
+    y_e = site.contract("bilm,iol->bolm", x, w)
+    y_p = ops.spectral_contract_lshared(x, w, policy=site, block_l=block_l)
+    mag = np.einsum("bilm,iol->bolm", np.abs(x), np.abs(w))
+    _assert_within_budget(
+        y_p, y_e, site.eps, mag, stages=2,
+        label=f"lshared {policy_name} B{B} I{I} O{O} L{L} M{Mm}")
+
+
+class TestDifferentialAllPolicies:
+    """Full registry-policy × factorisation × dimensionality cross."""
+
+    @pytest.mark.parametrize("policy_name", POLICY_NAMES)
+    @pytest.mark.parametrize("ndim", [1, 2, 3])
+    def test_dense(self, policy_name, ndim):
+        _diff_dense(policy_name, B=2, I=3, O=4, modes=MODES_BY_NDIM[ndim],
+                    seed=ndim)
+
+    @pytest.mark.parametrize("policy_name", POLICY_NAMES)
+    def test_lshared(self, policy_name):
+        _diff_lshared(policy_name, B=2, I=3, O=4, L=5, Mm=4, seed=21)
+
+    @pytest.mark.parametrize("policy_name", POLICY_NAMES)
+    @pytest.mark.parametrize("ndim", [1, 2, 3])
+    def test_cp(self, policy_name, ndim):
+        _diff_cp(policy_name, B=2, I=3, O=4, R=3, modes=MODES_BY_NDIM[ndim],
+                 seed=10 + ndim)
+
+    @given(
+        st.integers(min_value=1, max_value=3),
+        st.integers(min_value=1, max_value=13),
+        st.integers(min_value=1, max_value=13),
+        st.integers(min_value=1, max_value=21),
+        st.sampled_from(sorted(POLICIES)),
+        st.sampled_from(["dense", "cp"]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_property_random_shapes(self, B, I, O, M, policy_name, kind):
+        """Random non-MXU-aligned channels and mode counts (1D keeps the
+        example budget affordable; the ndim cross above covers 2D/3D)."""
+        seed = B * 10000 + I * 1000 + O * 100 + M
+        if kind == "dense":
+            _diff_dense(policy_name, B, I, O, (M,), seed)
+        else:
+            _diff_cp(policy_name, B, I, O, max(1, min(I, O)), (M,), seed)
+
+
+class TestPaddingAndFallback:
+    def test_block_m_padding_edge(self):
+        """Modes not divisible by block_m exercise the zero-pad + slice
+        path of all three dense kernels (fwd and both backward)."""
+        rng = np.random.RandomState(3)
+        x = _randc(rng, (2, 4, 13))   # M=13, block_m=8 -> pad to 16
+        w = _randc(rng, (4, 5, 13))
+        cr = jnp.asarray(rng.randn(2, 5, 13), jnp.float32)
+
+        def loss(fn):
+            def f(xr, xi, wr, wi):
+                yr, yi = fn(xr, xi, wr, wi)
+                return jnp.sum(yr * cr + yi * cr)
+            return f
+
+        args = tuple(jnp.asarray(a, jnp.float32)
+                     for a in (x.real, x.imag, w.real, w.imag))
+        pl_fn = loss(lambda *a: spectral_contract_pallas(
+            *a, block_m=8, interpret=True))
+
+        def ref_pair(xr, xi, wr, wi):
+            y = ref.spectral_contract_ref(
+                jax.lax.complex(xr, xi), jax.lax.complex(wr, wi))
+            return jnp.real(y), jnp.imag(y)
+
+        v1, g1 = jax.value_and_grad(pl_fn, argnums=(0, 1, 2, 3))(*args)
+        v2, g2 = jax.value_and_grad(loss(ref_pair), argnums=(0, 1, 2, 3))(*args)
+        np.testing.assert_allclose(float(v1), float(v2), rtol=1e-5)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_ops_wrapper_padding_multimode(self):
+        rng = np.random.RandomState(4)
+        x = _randc(rng, (2, 3, 3, 5))  # M=15, block_m=4 -> pad to 16
+        w = _randc(rng, (3, 4, 3, 5))
+        got = ops.spectral_contract(x, w, policy=FULL, block_m=4)
+        want = jnp.einsum("bixy,ioxy->boxy", x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_tucker_falls_back_to_einsum(self):
+        rng = np.random.RandomState(5)
+        params = init_spectral_weights(jax.random.PRNGKey(5), 4, 4, (3, 3),
+                                       "tucker")
+        x = jnp.asarray(rng.randn(2, 4, 8, 8), jnp.float32)
+        a = spectral_conv_apply(params, x, (3, 3), FULL, use_pallas=False)
+        b = spectral_conv_apply(params, x, (3, 3), FULL, use_pallas=True)
+        assert jnp.array_equal(a, b), "tucker must take the identical einsum path"
+
+    def test_non_dense_operands_raise(self):
+        rng = np.random.RandomState(6)
+        x = _randc(rng, (2, 4, 8))
+        with pytest.raises(ValueError, match="dense-only"):
+            ops.spectral_contract(x, _randc(rng, (4, 4)), policy=FULL)
+        with pytest.raises(ValueError, match="ComplexPair"):
+            ops.spectral_contract(x, {"U_i_re": np.zeros((4, 2))}, policy=FULL)
+        with pytest.raises(ValueError, match="disagree"):
+            ops.spectral_contract(x, _randc(rng, (5, 4, 8)), policy=FULL)
+        with pytest.raises(ValueError, match="mode factors"):
+            ops.spectral_contract_cp(
+                x, _randc(rng, (3,)), _randc(rng, (4, 3)), _randc(rng, (4, 3)),
+                [], policy=FULL)
+
+    def test_resolve_use_pallas_env(self, monkeypatch):
+        from repro.kernels.ops import resolve_use_pallas
+
+        assert resolve_use_pallas(True) is True
+        assert resolve_use_pallas(False) is False
+        monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+        assert resolve_use_pallas(None) is True
+        monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+        assert resolve_use_pallas(None) is False
+        monkeypatch.delenv("REPRO_USE_PALLAS")
+        assert resolve_use_pallas(None) == (jax.default_backend() == "tpu")
+
+    def test_pick_block_m_respects_budget(self):
+        from repro.kernels.spectral_contract import (
+            cp_vmem_bytes, vmem_bytes, vmem_bytes_bwd)
+
+        bm = pick_block_m(32, 64, 64, 4096)
+        assert bm in (8, 16, 32, 64, 128, 256, 512)
+        need = max(vmem_bytes(32, 64, 64, bm), vmem_bytes_bwd(32, 64, 64, bm))
+        assert need <= 8 * 2 ** 20
+        bm_cp = pick_block_m(32, 64, 64, 4096, rank=64)
+        assert cp_vmem_bytes(32, 64, 64, 64, bm_cp) <= 8 * 2 ** 20
+
+
+# ---------------------------------------------------------------------------
+# Gradients
+# ---------------------------------------------------------------------------
+
+
+def _grad_leaves(g):
+    return jax.tree_util.tree_leaves(g)
+
+
+def _rel_err(a, b):
+    dt = np.complex128 if np.iscomplexobj(np.asarray(a)) else np.float64
+    a = np.asarray(a, dt).ravel()
+    b = np.asarray(b, dt).ravel()
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-12))
+
+
+#: grad-parity tolerance per registry policy: tight where the contract
+#: site stays f32 (full and the AMP-only sets), storage-precision-sized
+#: where it quantises (half/fp8 families)
+GRAD_TOLS = {
+    "full": 1e-5,
+    "amp_bf16": 1e-4,
+    "amp_fp16": 1e-4,
+    "half_fno_only": 0.03,
+    "mixed_fno_bf16": 0.08,
+    "mixed_fno_fp16": 0.03,
+    "sim_fp8_e4m3": 0.03,
+    "sim_fp8_e5m2": 0.03,
+}
+
+
+def _grad_parity(policy_name, factorization, modes, spatial, seed=11):
+    policy = get_policy(policy_name)
+    rng = np.random.RandomState(seed)
+    params = init_spectral_weights(
+        jax.random.PRNGKey(seed), 4, 4, modes, factorization)
+    x = jnp.asarray(rng.randn(2, 4, *spatial), jnp.float32)
+
+    def loss(p, use_pallas):
+        y = spectral_conv_apply(p, x, modes, policy, use_pallas=use_pallas)
+        return jnp.mean(y ** 2)
+
+    l_e, g_e = jax.value_and_grad(loss)(params, False)
+    l_p, g_p = jax.value_and_grad(loss)(params, True)
+    tol = GRAD_TOLS[policy_name]
+    assert abs(float(l_p) - float(l_e)) <= tol * (abs(float(l_e)) + 1e-6)
+    for a, b in zip(_grad_leaves(g_p), _grad_leaves(g_e)):
+        assert _rel_err(a, b) <= tol, (policy_name, factorization, modes)
+
+
+class TestGradients:
+    assert sorted(GRAD_TOLS) == POLICY_NAMES, "cover every registry policy"
+
+    @pytest.mark.parametrize("policy_name", POLICY_NAMES)
+    @pytest.mark.parametrize("factorization", ["dense", "cp"])
+    def test_spectral_conv_value_and_grad_matches(self, policy_name,
+                                                  factorization):
+        _grad_parity(policy_name, factorization, (3, 3), (8, 8))
+
+    @pytest.mark.parametrize("policy_name", ["full", "mixed_fno_bf16"])
+    @pytest.mark.parametrize("factorization", ["dense", "cp"])
+    @pytest.mark.parametrize("ndim", [1, 3])
+    def test_spectral_conv_grads_1d_3d(self, policy_name, factorization,
+                                       ndim):
+        modes = MODES_BY_NDIM[ndim]
+        spatial = tuple(2 * m + 2 for m in modes)
+        _grad_parity(policy_name, factorization, modes, spatial, seed=ndim)
+
+    @pytest.mark.parametrize("policy_name", ["full", "mixed_fno_bf16"])
+    def test_lshared_grads_match_einsum(self, policy_name):
+        """value_and_grad through the SFNO l-shared kernel vs the einsum
+        path (both via the resolved contract site)."""
+        policy = get_policy(policy_name)
+        site = policy.at("sfno/layer0/spectral/contract")
+        rng = np.random.RandomState(23)
+        x = _randc(rng, (2, 3, 5, 4))
+        w = _randc(rng, (3, 4, 5))
+
+        def loss(w, use_pallas):
+            if use_pallas:
+                y = ops.spectral_contract_lshared(x, w, policy=site,
+                                                  block_l=2)
+            else:
+                y = site.contract("bilm,iol->bolm", x, w)
+            if isinstance(y, ComplexPair):
+                return jnp.mean(y.abs2())
+            return jnp.mean(jnp.abs(y) ** 2)
+
+        l_e, g_e = jax.value_and_grad(loss, holomorphic=False)(w, False)
+        l_p, g_p = jax.value_and_grad(loss, holomorphic=False)(w, True)
+        tol = GRAD_TOLS[policy_name] * 10  # complex-cotangent casts add noise
+        assert abs(float(l_p) - float(l_e)) <= tol * (abs(float(l_e)) + 1e-6)
+        assert _rel_err(np.asarray(g_p), np.asarray(g_e)) <= tol
+
+    @pytest.mark.parametrize("factorization", ["dense", "cp"])
+    def test_train_step_parity_with_loss_scaling(self, factorization):
+        """Full FNO/TFNO train steps through the Trainer, pallas vs
+        einsum, under the fp16 policy whose ``train/loss_scale`` site is
+        on — the loss-scale interaction rides through the custom VJP."""
+        cfg = FNOConfig(in_channels=1, out_channels=1, hidden_channels=8,
+                        lifting_channels=8, projection_channels=8,
+                        n_layers=2, modes=(4, 4), factorization=factorization)
+        params = init_fno(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(0)
+        batches = [
+            {"a": jnp.asarray(rng.randn(4, 1, 12, 12), jnp.float32),
+             "u": jnp.asarray(rng.randn(4, 1, 12, 12), jnp.float32)}
+            for _ in range(3)
+        ]
+
+        def loss_fn(p, batch, policy, use_pallas=None):
+            c = dataclasses.replace(cfg, use_pallas=use_pallas)
+            return relative_l2(fno_apply(p, batch["a"], c, policy), batch["u"])
+
+        from repro.core import PrecisionSchedule
+
+        results = {}
+        for up in (False, True):
+            tr = Trainer(loss_fn, params, TrainerConfig(
+                total_steps=3,
+                schedule=PrecisionSchedule.constant("mixed_fno_fp16"),
+                use_pallas=up,
+            ))
+            hist = tr.run(lambda step: batches[step])
+            results[up] = (tr.params, tr.scale_state, hist)
+        p_e, s_e, h_e = results[False]
+        p_p, s_p, h_p = results[True]
+        assert float(s_e.scale) == float(s_p.scale)
+        for a, b in zip(_grad_leaves(p_p), _grad_leaves(p_e)):
+            assert _rel_err(a, b) <= 2e-3
+        for he, hp in zip(h_e, h_p):
+            assert abs(he["loss"] - hp["loss"]) <= 0.02 * (abs(he["loss"]) + 1e-6)
+
+    def test_fd_gradcheck_fp64_dense(self):
+        """fp64 central-difference check of the custom VJP itself (both
+        backward kernels), on a tiny dense case in interpret mode."""
+        jax.config.update("jax_enable_x64", True)
+        try:
+            rng = np.random.RandomState(2)
+            shapes = [(1, 2, 3), (1, 2, 3), (2, 3, 3), (2, 3, 3)]
+            args = [jnp.asarray(rng.randn(*s), jnp.float64) for s in shapes]
+            cr = jnp.asarray(rng.randn(1, 3, 3), jnp.float64)
+            ci = jnp.asarray(rng.randn(1, 3, 3), jnp.float64)
+
+            def loss(xr, xi, wr, wi):
+                yr, yi = spectral_contract_pallas(
+                    xr, xi, wr, wi, block_m=8, interpret=True)
+                return jnp.sum(yr * cr + yi * ci)
+
+            grads = jax.grad(loss, argnums=(0, 1, 2, 3))(*args)
+            h = 1e-6
+            for k in range(4):
+                g = np.asarray(grads[k])
+                fd = np.zeros_like(g)
+                flat = np.asarray(args[k]).copy()
+                for idx in np.ndindex(g.shape):
+                    plus = flat.copy(); plus[idx] += h
+                    minus = flat.copy(); minus[idx] -= h
+                    ap = list(args); ap[k] = jnp.asarray(plus)
+                    am = list(args); am[k] = jnp.asarray(minus)
+                    fd[idx] = (float(loss(*ap)) - float(loss(*am))) / (2 * h)
+                np.testing.assert_allclose(g, fd, rtol=1e-6, atol=1e-7,
+                                           err_msg=f"arg {k}")
+        finally:
+            jax.config.update("jax_enable_x64", False)

@@ -210,9 +210,13 @@ def _old_fno_apply(params, x, cfg, pol, spectral_pols=None):
 class TestBitIdentity:
     @pytest.fixture(scope="class")
     def fno_setup(self):
+        # pinned to the einsum path: the frozen flat-policy reference
+        # below predates the Pallas kernels, and this test is about rule
+        # resolution being bit-identical, not about the kernel backend
+        # (tests/test_kernels_diff.py owns pallas-vs-einsum)
         cfg = FNOConfig(in_channels=1, out_channels=1, hidden_channels=8,
                         lifting_channels=8, projection_channels=8,
-                        n_layers=2, modes=(4, 4))
+                        n_layers=2, modes=(4, 4), use_pallas=False)
         params = init_fno(jax.random.PRNGKey(0), cfg)
         x = jnp.asarray(np.random.RandomState(0).randn(2, 1, 16, 16),
                         jnp.float32)
@@ -255,7 +259,8 @@ class TestPerSiteOverride:
         the result against a per-layer flat-policy reference."""
         cfg = FNOConfig(in_channels=1, out_channels=1, hidden_channels=8,
                         lifting_channels=8, projection_channels=8,
-                        n_layers=3, modes=(4, 4))
+                        n_layers=3, modes=(4, 4),
+                        use_pallas=False)  # einsum-path reference below
         params = init_fno(jax.random.PRNGKey(2), cfg)
         x = jnp.asarray(np.random.RandomState(2).randn(2, 1, 16, 16),
                         jnp.float32)
