@@ -65,7 +65,7 @@ def run(steps: int = 40, resolution: int = 32, interval: int = 5) -> dict:
         return relative_l2(fno_apply(p, batch["x"], cfg_small, policy),
                            batch["t"])
 
-    batch_fn = lambda step: {"x": a, "t": u}  # noqa: E731
+    batch_fn = lambda _step: {"x": a, "t": u}  # noqa: E731
 
     runs = {}
     # -- static baselines -----------------------------------------------------

@@ -55,7 +55,7 @@ def main():
               f"{fp16['upper']:>11.3e} {bf16['measured']:>11.3e}")
         if r["disc_measured"] > r["disc_upper"]:
             violations += 1
-        for fmt, p in r["prec"].items():
+        for p in r["prec"].values():
             if p["measured"] > p["upper"]:
                 violations += 1
 

@@ -1,0 +1,40 @@
+"""repro.analyze — static numerics & precision linter.
+
+Three passes over the repo's *traced* programs and *declared* tables —
+nothing executes:
+
+  dataflow  jaxpr walk of model forwards and Trainer steps per registry
+            policy (half accumulation, fp16 overflow reachability,
+            round-trip casts, fp32 residues on demoted sites);
+  sites     AST scan of site literals + rule-table cross-checks
+            (orphans, dead patterns, shadowed entries);
+  kernels   BlockSpec/grid/VMEM checks over the Pallas kernel families.
+
+``python -m repro.analyze`` runs everything, writes
+``benchmarks/results/analyze.json`` and exits nonzero on unsuppressed
+error-severity findings; ``analyze.toml`` holds the reviewed allowlist.
+"""
+from .findings import (  # noqa: F401
+    ERROR,
+    WARNING,
+    Finding,
+    Suppression,
+    dedupe,
+    load_suppressions,
+    partition,
+    summarize,
+)
+from .dataflow import (  # noqa: F401
+    analyze_closed_jaxpr,
+    dtype_trace,
+    model_findings,
+    trace_findings,
+    trainer_findings,
+)
+from .sites import (  # noqa: F401
+    rule_table_findings,
+    shadowed_entries,
+    site_universe,
+    sites_pass,
+)
+from .kernels import kernels_pass, record_pallas_calls  # noqa: F401

@@ -1,0 +1,144 @@
+"""CLI: ``python -m repro.analyze`` — run all passes, print the findings
+table, write ``benchmarks/results/analyze.json``, exit nonzero on any
+unsuppressed error-severity finding (the CI merge gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from .findings import (
+    ERROR,
+    Finding,
+    dedupe,
+    load_suppressions,
+    partition,
+    summarize,
+)
+
+_REPO_ROOT = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+DEFAULT_OUT = os.path.join(_REPO_ROOT, "benchmarks", "results", "analyze.json")
+DEFAULT_SUPPRESSIONS = os.path.join(_REPO_ROOT, "analyze.toml")
+DEFAULT_SRC = os.path.join(_REPO_ROOT, "src")
+
+MODELS = ("fno", "tfno", "sfno")
+
+
+def run_dataflow(policies: List[str], models: List[str],
+                 pallas_paths: List[bool], trainer: bool) -> List[Finding]:
+    from repro.precision.policy import get_policy
+
+    from .dataflow import model_findings, trainer_findings
+
+    findings: List[Finding] = []
+    for name in policies:
+        policy = get_policy(name)
+        for model in models:
+            for use_pallas in pallas_paths:
+                findings.extend(model_findings(model, policy, use_pallas))
+        if trainer:
+            findings.extend(trainer_findings(policy))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analyze",
+        description="static numerics & precision linter (jaxpr dtype flow, "
+                    "site rules, Pallas kernels)")
+    ap.add_argument("--policies", nargs="*", default=None,
+                    help="registry policies to trace (default: all)")
+    ap.add_argument("--models", nargs="*", default=list(MODELS),
+                    choices=MODELS, help="models to trace")
+    ap.add_argument("--pallas", choices=("both", "on", "off"),
+                    default="both",
+                    help="which spectral kernel paths to trace")
+    ap.add_argument("--no-trainer", action="store_true",
+                    help="skip the full-Trainer-step traces")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=("dataflow", "sites", "kernels"),
+                    help="passes to skip")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="findings report path (JSON)")
+    ap.add_argument("--suppressions", default=DEFAULT_SUPPRESSIONS,
+                    help="reviewed-allowlist TOML (missing file = empty)")
+    ap.add_argument("--src", default=DEFAULT_SRC,
+                    help="source root for the site-literal AST scan")
+    ap.add_argument("--max-print", type=int, default=20,
+                    help="cap on individually printed findings per severity")
+    args = ap.parse_args(argv)
+
+    from repro.precision.policy import POLICIES
+
+    policies = args.policies or sorted(POLICIES)
+    pallas_paths = {"both": [False, True], "on": [True],
+                    "off": [False]}[args.pallas]
+
+    findings: List[Finding] = []
+    if "dataflow" not in args.skip:
+        print(f"[analyze] dataflow: {len(policies)} policies x "
+              f"{len(args.models)} models x {len(pallas_paths)} paths"
+              + ("" if args.no_trainer else " + trainer steps"))
+        findings.extend(run_dataflow(policies, args.models, pallas_paths,
+                                     trainer=not args.no_trainer))
+    if "sites" not in args.skip:
+        print(f"[analyze] sites: AST scan of {args.src} + rule tables")
+        from .sites import sites_pass
+
+        findings.extend(sites_pass(args.src))
+    if "kernels" not in args.skip:
+        print("[analyze] kernels: tracing Pallas kernel families")
+        from .kernels import kernels_pass
+
+        findings.extend(kernels_pass())
+
+    findings = dedupe(findings)
+    suppressions = load_suppressions(args.suppressions)
+    active, suppressed = partition(findings, suppressions)
+    summary = summarize(active)
+
+    # -- report --------------------------------------------------------------
+    print()
+    print(f"{'pass':<10} {'check':<22} {'severity':<9} count")
+    for row in summary["by_check"]:
+        print(f"{row['pass']:<10} {row['check']:<22} {row['severity']:<9} "
+              f"{row['count']}")
+    if not summary["by_check"]:
+        print("(no findings)")
+    print(f"\n{summary['errors']} error(s), {summary['warnings']} "
+          f"warning(s); {len(suppressed)} suppressed via "
+          f"{os.path.relpath(args.suppressions, _REPO_ROOT)}")
+
+    errors = [f for f in active if f.severity == ERROR]
+    for sev, rows in (("error", errors),
+                      ("warning", [f for f in active
+                                   if f.severity != ERROR])):
+        for f in rows[:args.max_print]:
+            loc = f" site={f.site}" if f.site else ""
+            print(f"  [{sev}] {f.check} @ {f.where}{loc}: {f.detail}")
+        if len(rows) > args.max_print:
+            print(f"  ... {len(rows) - args.max_print} more {sev}(s) — "
+                  f"see {os.path.relpath(args.out, _REPO_ROOT)}")
+
+    report = {
+        "policies": policies,
+        "models": list(args.models),
+        "pallas_paths": pallas_paths,
+        "summary": summary,
+        "findings": [f.to_json() for f in active],
+        "suppressed": [f.to_json() for f in suppressed],
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    print(f"\nwrote {args.out}")
+
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -158,7 +158,7 @@ def site_stats(x, fmt: Optional[str] = None, quantized=None,
     overflow = jnp.maximum(overflow, (~(amax <= fmax)).astype(jnp.float32))
     if quantized is not None:
         qerr = jnp.zeros((), jnp.float32)
-        for p, q in zip(_parts(x), _parts(quantized)):
+        for p, q in zip(_parts(x), _parts(quantized), strict=True):
             d = jnp.abs(q.astype(jnp.float32) - p.astype(jnp.float32))
             qerr = jnp.maximum(qerr, jnp.max(d, initial=0.0))
     else:

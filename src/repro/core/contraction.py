@@ -55,10 +55,10 @@ def _parse(expr: str, shapes: Sequence[Tuple[int, ...]]):
     if len(terms) != len(shapes):
         raise ValueError(f"{expr}: {len(terms)} terms but {len(shapes)} operands")
     dims: Dict[str, int] = {}
-    for term, shape in zip(terms, shapes):
+    for term, shape in zip(terms, shapes, strict=True):
         if len(term) != len(shape):
             raise ValueError(f"term {term} rank mismatch with shape {shape}")
-        for ch, s in zip(term, shape):
+        for ch, s in zip(term, shape, strict=True):
             if ch in dims and dims[ch] != s:
                 raise ValueError(f"index {ch}: size {dims[ch]} vs {s}")
             dims[ch] = s
@@ -82,7 +82,7 @@ def _size(term: str, dims: Dict[str, int]) -> int:
     return n
 
 
-def _pair_flops(a: str, b: str, out: str, dims: Dict[str, int]) -> int:
+def _pair_flops(a: str, b: str, _out: str, dims: Dict[str, int]) -> int:
     # 2 * prod(all involved indices)
     return 2 * _size("".join(dict.fromkeys(a + b)), dims)
 

@@ -139,7 +139,7 @@ class ComplexPair:
         return (self.re, self.im), None
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, _aux, children):
         return cls(*children)
 
     # -- constructors / views --

@@ -77,7 +77,7 @@ def init_spectral_weights(
         params["lam_im"] = scale * jax.random.normal(keys[1], (nc, r), jnp.float32)
         dims = [in_channels, out_channels, *modes]
         names = ["i", "o"] + [f"m{k}" for k in range(ndim)]
-        for idx, (nm, ddim) in enumerate(zip(names, dims)):
+        for idx, (nm, ddim) in enumerate(zip(names, dims, strict=True)):
             params[f"U_{nm}_re"] = jax.random.normal(
                 keys[2 + 2 * idx], (nc, ddim, r), jnp.float32
             ) / math.sqrt(r)
@@ -94,7 +94,7 @@ def init_spectral_weights(
         params["core_re"] = scale * jax.random.normal(keys[0], (nc, *ranks), jnp.float32)
         params["core_im"] = scale * jax.random.normal(keys[1], (nc, *ranks), jnp.float32)
         names = ["i", "o"] + [f"m{k}" for k in range(len(modes))]
-        for idx, (nm, ddim, rr) in enumerate(zip(names, dims, ranks)):
+        for idx, (nm, ddim, rr) in enumerate(zip(names, dims, ranks, strict=True)):
             params[f"U_{nm}_re"] = jax.random.normal(
                 keys[2 + 2 * idx], (nc, ddim, rr), jnp.float32
             ) / math.sqrt(rr)
@@ -276,15 +276,17 @@ def spectral_conv_apply(
             yc = yc.to_complex()
         out_f = out_f.at[(slice(None), slice(None), *sl)].set(yc.astype(jnp.complex64))
 
-    # 3. inverse FFT back to physical space
-    y = jnp.fft.irfftn(out_f, s=spatial, axes=tuple(range(2, 2 + ndim)))
-    from repro.autoprec.telemetry import fmt_of, tap
+    # 3. inverse FFT back to physical space.  named_scope: the analyzer
+    # attributes the iFFT/storage-cast eqns to the fft_out site.
+    with jax.named_scope(f"{site}/fft_out"):
+        y = jnp.fft.irfftn(out_f, s=spatial, axes=tuple(range(2, 2 + ndim)))
+        from repro.autoprec.telemetry import fmt_of, tap
 
-    tap(f"{site}/fft_out", y, fmt=fmt_of(fft_out))
-    if fft_out.spectral_is_half:
-        # iFFT output also lives at half precision in the paper's pipeline
-        y = y.astype(fft_out.compute_dtype)
-    return y.astype(in_dtype)
+        tap(f"{site}/fft_out", y, fmt=fmt_of(fft_out))
+        if fft_out.spectral_is_half:
+            # iFFT output also lives at half precision in the paper's pipeline
+            y = y.astype(fft_out.compute_dtype)
+        return y.astype(in_dtype)
 
 
 def _out_channels(params: dict) -> int:

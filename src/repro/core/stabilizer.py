@@ -56,4 +56,6 @@ def get_stabilizer(name: Optional[str]) -> Callable[[jnp.ndarray], jnp.ndarray]:
     try:
         return STABILIZERS[name]
     except KeyError:
-        raise KeyError(f"unknown stabilizer {name!r}; have {sorted(k for k in STABILIZERS if k)}")
+        raise KeyError(
+            f"unknown stabilizer {name!r}; have {sorted(k for k in STABILIZERS if k)}"
+        ) from None

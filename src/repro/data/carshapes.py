@@ -37,9 +37,11 @@ def _superellipsoid_points(rng: np.random.RandomState, n_points: int):
     return pts.astype(np.float32), normals.astype(np.float32)
 
 
-def _pressure_label(normals: np.ndarray, inlet=np.array([1.0, 0.0, 0.0])):
+def _pressure_label(normals: np.ndarray, inlet=None):
     """Potential-flow-style C_p from the angle between surface normal and
     the inlet direction: C_p = 1 - 9/4 sin²θ (sphere potential flow)."""
+    if inlet is None:
+        inlet = np.array([1.0, 0.0, 0.0])
     c = normals @ inlet
     s2 = 1.0 - c ** 2
     return (1.0 - 2.25 * s2).astype(np.float32)[:, None]

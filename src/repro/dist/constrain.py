@@ -79,7 +79,7 @@ def _resolve_spec(shape, spec, mesh) -> Optional[P]:
     """
     used: set = set()
     entries = []
-    for dim, entry in zip(shape, spec):
+    for dim, entry in zip(shape, spec, strict=False):
         axes = resolve_axes(entry, mesh, used)
         while axes:
             prod = 1

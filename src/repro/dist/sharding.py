@@ -33,7 +33,7 @@ def _try_candidate(shape, mesh: Mesh, cand: Candidate) -> Optional[P]:
         return None
     used: set = set()
     entries = []
-    for dim, entry in zip(shape, cand):
+    for dim, entry in zip(shape, cand, strict=False):
         axes = resolve_axes(entry, mesh, used)
         prod = 1
         for ax in axes:

@@ -114,11 +114,11 @@ def flash_attention(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_q, D), lambda bh, qi, kb: (bh, qi, 0)),
-            pl.BlockSpec((1, block_k, D), lambda bh, qi, kb: (bh, kb, 0)),
-            pl.BlockSpec((1, block_k, D), lambda bh, qi, kb: (bh, kb, 0)),
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, _kb: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, _qi, kb: (bh, kb, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, _qi, kb: (bh, kb, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, kb: (bh, qi, 0)),
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, _kb: (bh, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sp, D), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, D), jnp.float32),

@@ -139,11 +139,14 @@ def spectral_contract(
         block_m = pick_block_m(B, I, O, M,
                                itemsize=jnp.dtype(half).itemsize)
 
-    out_re, out_im = spectral_contract_pallas(
-        xp.re.reshape(B, I, M), xp.im.reshape(B, I, M),
-        wp.re.reshape(I, O, M), wp.im.reshape(I, O, M),
-        block_m=block_m, interpret=_use_interpret(), out_dtype=half,
-    )
+    # named_scope: eqns traced under this site carry its address in
+    # their name stack — repro.analyze attributes findings with it
+    with jax.named_scope(policy.site):
+        out_re, out_im = spectral_contract_pallas(
+            xp.re.reshape(B, I, M), xp.im.reshape(B, I, M),
+            wp.re.reshape(I, O, M), wp.im.reshape(I, O, M),
+            block_m=block_m, interpret=_use_interpret(), out_dtype=half,
+        )
     pair = ComplexPair(
         out_re.reshape(B, O, *modes), out_im.reshape(B, O, *modes)
     )
@@ -199,11 +202,12 @@ def spectral_contract_cp(
         block_m = pick_block_m(B, I, O, M, rank=uip.re.shape[1],
                                itemsize=jnp.dtype(half).itemsize)
 
-    out_re, out_im = spectral_contract_cp_pallas(
-        xp.re.reshape(B, I, M), xp.im.reshape(B, I, M),
-        uip.re, uip.im, uop.re, uop.im, wp.re, wp.im,
-        block_m=block_m, interpret=_use_interpret(), out_dtype=half,
-    )
+    with jax.named_scope(policy.site):
+        out_re, out_im = spectral_contract_cp_pallas(
+            xp.re.reshape(B, I, M), xp.im.reshape(B, I, M),
+            uip.re, uip.im, uop.re, uop.im, wp.re, wp.im,
+            block_m=block_m, interpret=_use_interpret(), out_dtype=half,
+        )
     pair = ComplexPair(
         out_re.reshape(B, O, *modes), out_im.reshape(B, O, *modes)
     )
@@ -241,10 +245,11 @@ def spectral_contract_lshared(
     if block_l is None:
         block_l = pick_block_l(B, I, O, L, Mm,
                                itemsize=jnp.dtype(half).itemsize)
-    out_re, out_im = spectral_contract_lshared_pallas(
-        xp.re, xp.im, wp.re, wp.im,
-        block_l=block_l, interpret=_use_interpret(), out_dtype=half,
-    )
+    with jax.named_scope(policy.site):
+        out_re, out_im = spectral_contract_lshared_pallas(
+            xp.re, xp.im, wp.re, wp.im,
+            block_l=block_l, interpret=_use_interpret(), out_dtype=half,
+        )
     pair = ComplexPair(out_re, out_im)
     if was_pair and policy.spectral_is_half:
         return pair

@@ -45,7 +45,7 @@ def rmsnorm(
         grid=(Np // block_rows,),
         in_specs=[
             pl.BlockSpec((block_rows, D), lambda r: (r, 0)),
-            pl.BlockSpec((D,), lambda r: (0,)),
+            pl.BlockSpec((D,), lambda _r: (0,)),
         ],
         out_specs=pl.BlockSpec((block_rows, D), lambda r: (r, 0)),
         out_shape=jax.ShapeDtypeStruct((Np, D), x.dtype),

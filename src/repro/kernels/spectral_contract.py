@@ -370,8 +370,8 @@ def _cp_bwd_kernel(xr_ref, xi_ref, uir_ref, uii_ref, uor_ref, uoi_ref,
 
 def _cp_specs(B, I, O, R, block_m):
     x = _x_spec(B, I, block_m)
-    ui = pl.BlockSpec((I, R), lambda m: (0, 0))
-    uo = pl.BlockSpec((O, R), lambda m: (0, 0))
+    ui = pl.BlockSpec((I, R), lambda _m: (0, 0))
+    uo = pl.BlockSpec((O, R), lambda _m: (0, 0))
     w = pl.BlockSpec((R, block_m), lambda m: (0, m))
     return x, ui, uo, w
 

@@ -20,6 +20,7 @@ formats.
 from __future__ import annotations
 
 import dataclasses
+import operator
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -140,7 +141,7 @@ def apply_block_loop(block, h, stacked, policy: PrecisionPolicy, model: str,
         h, _ = jax.lax.scan(lambda c, lp: (block(c, lp, 0), None), h, stacked)
         return h
     for l in range(n_layers):
-        lp = jax.tree_util.tree_map(lambda v: v[l], stacked)
+        lp = jax.tree_util.tree_map(operator.itemgetter(l), stacked)
         h = block(h, lp, l)
     return h
 

@@ -40,7 +40,7 @@ def init_ssd(key, d_model, d_inner, n_heads, d_state):
     }
 
 
-def _split_proj(params, u, d_inner, d_state, n_heads, dtype):
+def _split_proj(params, u, d_inner, d_state, _n_heads, dtype):
     proj = jnp.einsum("...d,de->...e", u.astype(dtype), params["w_in"].astype(dtype),
                       preferred_element_type=jnp.float32).astype(dtype)
     x, z, Bc, Cc, dt = jnp.split(

@@ -90,13 +90,16 @@ def _spherical_conv(h, w, cfg: SFNOConfig, policy: PrecisionPolicy,
         out = ctr.contract("bilm,iol->bolm", coeffs, wc)
     if isinstance(out, ComplexPair):
         out = out.to_complex()
-    y = sht_inverse(out.astype(jnp.complex64), cfg.nlat, cfg.nlon)
-    from repro.autoprec.telemetry import fmt_of, tap
+    # named_scope: repro.analyze attributes the inverse-transform and
+    # storage-cast eqns to the fft_out site (as core/spectral.py does)
+    with jax.named_scope(f"{site}/fft_out"):
+        y = sht_inverse(out.astype(jnp.complex64), cfg.nlat, cfg.nlon)
+        from repro.autoprec.telemetry import fmt_of, tap
 
-    tap(f"{site}/fft_out", y, fmt=fmt_of(fft_out))
-    if fft_out.spectral_is_half:
-        y = y.astype(fft_out.compute_dtype)
-    return y
+        tap(f"{site}/fft_out", y, fmt=fmt_of(fft_out))
+        if fft_out.spectral_is_half:
+            y = y.astype(fft_out.compute_dtype)
+        return y
 
 
 def sfno_apply(

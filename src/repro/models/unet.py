@@ -51,7 +51,7 @@ def init_unet(key: jax.Array, cfg: UNetConfig) -> dict:
     cin = cfg.in_channels
     enc = []
     width = w
-    for d in range(cfg.depth):
+    for _ in range(cfg.depth):
         enc.append(
             {
                 "c1": _conv_init(keys[next(ki)], cin, width),
@@ -81,6 +81,9 @@ def unet_apply(
     params: dict, x: jnp.ndarray, cfg: UNetConfig, policy: PrecisionPolicy = FULL
 ) -> jnp.ndarray:
     """x: (B, C, H, W) -> (B, out, H, W).  H, W must be divisible by 2^depth."""
+    if x.shape[-2] % (1 << cfg.depth) or x.shape[-1] % (1 << cfg.depth):
+        raise ValueError(
+            f"spatial dims {x.shape[-2:]} not divisible by 2^{cfg.depth}")
     cdt = policy.at("unet/dense").compute_dtype
     head_dt = policy.at("unet/proj_out").compute_dtype
     h = x.astype(cdt)
@@ -94,7 +97,7 @@ def unet_apply(
         )
     h = jax.nn.gelu(_conv(params["mid1"], h, cdt))
     h = jax.nn.gelu(_conv(params["mid2"], h, cdt))
-    for blk, skip in zip(params["dec"], reversed(skips)):
+    for blk, skip in zip(params["dec"], reversed(skips), strict=True):
         B, C, H, W = h.shape
         h = jax.image.resize(h, (B, C, H * 2, W * 2), "nearest")
         h = jnp.concatenate([h, skip.astype(cdt)], axis=1)

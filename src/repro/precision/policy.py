@@ -114,7 +114,8 @@ class SitePrecision:
             return x
         from repro.core.stabilizer import get_stabilizer
 
-        return get_stabilizer(self.stabilizer)(x)
+        with jax.named_scope(self.site):
+            return get_stabilizer(self.stabilizer)(x)
 
     def quantize(self, c: jnp.ndarray) -> jnp.ndarray:
         """Round a complex tensor onto this site's storage grid: half
@@ -133,12 +134,15 @@ class SitePrecision:
             return c
         from repro.core.precision import quantize_complex, simulate_fp8
 
-        if self.quantize_fmt == "half":
-            q = quantize_complex(c, self.compute)
-        else:
-            re = simulate_fp8(jnp.real(c), self.quantize_fmt)
-            im = simulate_fp8(jnp.imag(c), self.quantize_fmt)
-            q = jax.lax.complex(re, im)
+        # named_scope: eqns traced under this site carry its address in
+        # their name stack — repro.analyze attributes findings with it
+        with jax.named_scope(self.site):
+            if self.quantize_fmt == "half":
+                q = quantize_complex(c, self.compute)
+            else:
+                re = simulate_fp8(jnp.real(c), self.quantize_fmt)
+                im = simulate_fp8(jnp.imag(c), self.quantize_fmt)
+                q = jax.lax.complex(re, im)
         tap(self.site, c, fmt=fmt_of(self), quantized=q)
         return q
 
@@ -151,9 +155,10 @@ class SitePrecision:
             # tap the activation operand against the contract site's
             # storage format (the site auto-precision demotes/promotes)
             tap(self.site, operands[0], fmt=fmt_of(self))
-        return _contract(
-            expr, *operands, policy=self, objective=objective, cache=cache
-        )
+        with jax.named_scope(self.site):
+            return _contract(
+                expr, *operands, policy=self, objective=objective, cache=cache
+            )
 
 
 def resolve_site(site: str, rules: Tuple[Entry, ...]) -> SitePrecision:
@@ -305,7 +310,9 @@ def get_policy(name: str) -> PrecisionPolicy:
     try:
         return POLICIES[name]
     except KeyError:
-        raise KeyError(f"unknown precision policy {name!r}; have {sorted(POLICIES)}")
+        raise KeyError(
+            f"unknown precision policy {name!r}; have {sorted(POLICIES)}"
+        ) from None
 
 
 #: Sites worth surfacing in reports / dry-run records.

@@ -122,7 +122,9 @@ def normalize_entries(entries: Sequence) -> Tuple[Entry, ...]:
         try:
             pattern, r = e
         except (TypeError, ValueError):
-            raise TypeError(f"rule entry must be a (pattern, SiteRule) pair, got {e!r}")
+            raise TypeError(
+                f"rule entry must be a (pattern, SiteRule) pair, got {e!r}"
+            ) from None
         if isinstance(r, dict):
             r = SiteRule(**r)
         if not isinstance(r, SiteRule):

@@ -293,7 +293,8 @@ class LMEngine(EngineBase):
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
             return
-        for i, req in zip(free, self.scheduler.take(len(free), self._ticks)):
+        for i, req in zip(free, self.scheduler.take(len(free), self._ticks),
+                          strict=False):
             self.slots[i] = req
             self._reset_slot(i)
             # empty prompts decode from token 0, like the old engine

@@ -205,7 +205,7 @@ class OperatorEngine(EngineBase):
         self._n_fields += len(batch)
         self._n_points += int(np.prod(res, dtype=np.int64)) * len(batch)
         finished = []
-        for r, y in zip(batch, yb):
+        for r, y in zip(batch, yb, strict=True):
             r.y = y
             finished.append(r)
         return finished

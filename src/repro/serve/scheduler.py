@@ -34,7 +34,7 @@ class Scheduler:
             raise ValueError(f"unknown scheduler policy {policy!r}; have {POLICIES}")
         self.policy = policy
         self.capacity_check = capacity_check
-        self.cost = cost or (lambda req: 0.0)
+        self.cost = cost or (lambda _req: 0.0)
         self.waiting: List[Any] = []
         self.rejected: List[Any] = []
         self.n_submitted = 0

@@ -121,7 +121,7 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None, shardings: A
         jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(flat)
     )
     leaves = []
-    for (key_path, leaf), shard in zip(flat, shard_flat):
+    for (key_path, leaf), shard in zip(flat, shard_flat, strict=True):
         key = _SEP.join(str(p) for p in key_path)
         arr = data[key]
         if shard is not None:

@@ -230,7 +230,7 @@ class TestAutoPrecisionTraining:
                                       cooldown=0)
         tr = Trainer(loss_fn, params,
                      TrainerConfig(total_steps=9, autoprec=ctl))
-        hist = tr.run(lambda s: batch)
+        hist = tr.run(lambda _s: batch)
         assert np.isfinite([h["loss"] for h in hist]).all()
         assert tr.stats["policy_changes"] == 1
         assert tr.stats["recompiles"] == 2    # full+auto0 and full+auto1
@@ -247,7 +247,7 @@ class TestAutoPrecisionTraining:
         _, params, loss_fn, batch = _tiny_problem(n_layers=1)
         tr = Trainer(loss_fn, params, TrainerConfig(
             total_steps=2, schedule=PrecisionSchedule.auto("full")))
-        tr.run(lambda s: batch)
+        tr.run(lambda _s: batch)
         assert tr.controller is not None
         assert tr.controller.base.name == "full"
 
@@ -255,12 +255,12 @@ class TestAutoPrecisionTraining:
         _, params, loss_fn, batch = _tiny_problem(n_layers=1)
         tr = Trainer(loss_fn, params, TrainerConfig(
             total_steps=2, microbatches=2, telemetry=True))
-        tr.run(lambda s: batch)
+        tr.run(lambda _s: batch)
         w = tr.telemetry.totals["fno/layer0/spectral/fft_in"]
         # both microbatches' taps merged into each step's stats
         tr1 = Trainer(loss_fn, params, TrainerConfig(
             total_steps=2, microbatches=1, telemetry=True))
-        tr1.run(lambda s: batch)
+        tr1.run(lambda _s: batch)
         w1 = tr1.telemetry.totals["fno/layer0/spectral/fft_in"]
         np.testing.assert_allclose(w.n, w1.n)
 
@@ -269,7 +269,7 @@ class TestAutoPrecisionTraining:
         plain schedules is unchanged (loss path identical)."""
         _, params, loss_fn, batch = _tiny_problem(n_layers=1)
         tr = Trainer(loss_fn, params, TrainerConfig(total_steps=3))
-        hist = tr.run(lambda s: batch)
+        hist = tr.run(lambda _s: batch)
         assert tr.telemetry is None
         assert hist[-1]["loss"] < hist[0]["loss"]
 
@@ -313,7 +313,7 @@ class TestLossScaleComposition:
         # age the scale state so a reset would be visible
         tr.scale_state = tr.scale_state._replace(
             scale=jnp.asarray(256.0, jnp.float32))
-        hist = tr.run(lambda s: batch)
+        hist = tr.run(lambda _s: batch)
         assert ctl.sites["fno/layer0/spectral"].fmt == "float16"
         assert tr.stats["policy_changes"] == 1
         # loss scaling became active (fp16 overlay) and the carried

@@ -26,6 +26,7 @@ class TestSpectralConv:
     @pytest.mark.parametrize("ndim,spatial", [(1, (32,)), (2, (16, 16)), (3, (8, 8, 8))])
     def test_shapes(self, ndim, spatial):
         rng = np.random.RandomState(0)
+        assert len(spatial) == ndim
         key = jax.random.PRNGKey(0)
         modes = tuple(max(2, s // 4) for s in spatial)
         params = init_spectral_weights(key, 4, 6, modes)
@@ -170,7 +171,7 @@ class TestSchedule:
         s = PrecisionSchedule.paper_default("bf16")
         bs = s.phase_boundaries(1000)
         assert bs[0][0] == 0 and bs[-1][1] == 1000
-        assert all(b[1] == nb[0] for b, nb in zip(bs, bs[1:]))
+        assert all(b[1] == nb[0] for b, nb in zip(bs, bs[1:], strict=False))
 
     def test_invalid_raises(self):
         with pytest.raises(ValueError):

@@ -131,7 +131,7 @@ class TestLoaders:
         assert seq1 == seq2
 
     def test_host_sharding_disjoint(self):
-        fn = lambda seed, idx: {"i": np.asarray([idx])}
+        fn = lambda _seed, idx: {"i": np.asarray([idx])}
         hosts = [StatelessLoader(fn, host_id=h, num_hosts=4) for h in range(4)]
         seen = [int(h.batch_at(7)["i"][0]) for h in hosts]
         assert len(set(seen)) == 4  # disjoint indices across hosts

@@ -1,0 +1,81 @@
+"""Golden dtype-trace snapshots per registry policy.
+
+``repro.analyze.dtype_trace`` records the exact cast / contraction /
+FFT / kernel dtype sequence of one FNO spectral layer as traced under
+each policy.  The sequences live in ``tests/golden/dtype_traces.json``;
+a refactor that silently changes where a cast lands, which dtype a
+contraction accumulates in, or whether the Pallas path quantises its
+operands shows up here as a diff — set ``REPRO_REGEN_GOLDENS=1`` and
+rerun to re-record after an *intentional* numerics change.
+"""
+import json
+import os
+
+import pytest
+
+from repro.analyze import dtype_trace
+from repro.precision.policy import POLICIES, get_policy
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "dtype_traces.json")
+
+_KEYS = [name + suffix
+         for name in sorted(POLICIES)
+         for suffix in ("", "+pallas")]
+
+
+def _load_goldens():
+    with open(GOLDEN_PATH) as fh:
+        return json.load(fh)
+
+
+def _compute(key):
+    name, _, suffix = key.partition("+")
+    return dtype_trace(get_policy(name), use_pallas=suffix == "pallas")
+
+
+@pytest.fixture(scope="module")
+def goldens():
+    if os.environ.get("REPRO_REGEN_GOLDENS") == "1":
+        gold = {key: _compute(key) for key in _KEYS}
+        with open(GOLDEN_PATH, "w") as fh:
+            json.dump(gold, fh, indent=2, sort_keys=True)
+    return _load_goldens()
+
+
+class TestGoldenTraces:
+    def test_golden_file_covers_every_policy(self, goldens):
+        assert sorted(goldens) == sorted(_KEYS)
+
+    @pytest.mark.parametrize("key", _KEYS)
+    def test_trace_matches_golden(self, goldens, key):
+        assert _compute(key) == goldens[key], (
+            f"dtype sequence for {key!r} drifted from the golden "
+            f"snapshot; if the numerics change is intentional, "
+            f"regenerate with REPRO_REGEN_GOLDENS=1")
+
+
+class TestTraceInvariants:
+    """Policy-level properties that must hold regardless of the exact
+    golden sequence (these survive jax version bumps that reorder or
+    rename eqns, where the snapshots would need regeneration)."""
+
+    @pytest.mark.parametrize("name", sorted(POLICIES))
+    def test_no_half_accumulation_on_pallas_path(self, name):
+        trace = dtype_trace(get_policy(name), use_pallas=True)
+        for entry in trace:
+            if entry.startswith("dot_general:"):
+                acc = entry.split("@acc=")[1].split("@")[0]
+                assert acc not in ("float16", "bfloat16"), entry
+
+    def test_half_policy_touches_half_dtype(self):
+        # mixed_fno_fp16 stores the spectrum at f16: the trace must
+        # actually contain the half dtype (the fp32-resident check's
+        # dynamic counterpart)
+        trace = dtype_trace(get_policy("mixed_fno_fp16"), use_pallas=True)
+        assert any("float16" in e for e in trace), trace
+
+    def test_full_policy_is_all_f32(self):
+        trace = dtype_trace(get_policy("full"))
+        for entry in trace:
+            assert "float16" not in entry and "bfloat16" not in entry, entry

