@@ -8,8 +8,17 @@ chunked-prefill decoding with per-request sampling:
     PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m
     PYTHONPATH=src python examples/serve_lm.py --scheduler spf \\
         --temperature 0.8 --top-p 0.9 --prefill-chunk 16
+
+``--paged`` swaps in the paged KV-block engine (``--block-size`` rows
+per block, prefix sharing on); ``--slo-deadline-ms`` drives the run
+through the async frontend with a per-request deadline and prints the
+SLO accounting:
+
+    PYTHONPATH=src python examples/serve_lm.py --paged --block-size 8 \\
+        --slo-deadline-ms 250
 """
 import argparse
+import asyncio
 import json
 
 import jax
@@ -17,7 +26,13 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models.lm import init_lm
-from repro.serve import LMEngine, Request, SamplingParams
+from repro.serve import (
+    AsyncServeFrontend,
+    LMEngine,
+    PagedLMEngine,
+    Request,
+    SamplingParams,
+)
 
 
 def main():
@@ -33,15 +48,29 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve over the paged KV-block cache "
+                         "(COW + prefix sharing)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV rows per block (paged engine only)")
+    ap.add_argument("--slo-deadline-ms", type=float, default=None,
+                    help="drive requests through the async frontend with "
+                         "this per-request deadline and report SLO metrics")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     if cfg.encoder_decoder:
         raise SystemExit("enc-dec serving demo: use whisper_decode_step directly")
     params = init_lm(jax.random.PRNGKey(0), cfg)
-    engine = LMEngine(params, cfg, n_slots=args.slots, max_len=64,
-                      scheduler=args.scheduler,
-                      prefill_chunk=args.prefill_chunk, seed=args.seed)
+    if args.paged:
+        engine = PagedLMEngine(params, cfg, n_slots=args.slots, max_len=64,
+                               scheduler=args.scheduler,
+                               prefill_chunk=args.prefill_chunk,
+                               seed=args.seed, block_size=args.block_size)
+    else:
+        engine = LMEngine(params, cfg, n_slots=args.slots, max_len=64,
+                          scheduler=args.scheduler,
+                          prefill_chunk=args.prefill_chunk, seed=args.seed)
 
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
@@ -51,9 +80,21 @@ def main():
                 max_new_tokens=8, sampling=sampling)
         for i in range(args.requests)
     ]
-    for r in reqs:
-        engine.submit(r)
-    done, ticks = engine.drain()
+    if args.slo_deadline_ms is not None:
+        front = AsyncServeFrontend(engine)
+
+        async def run_async():
+            return await asyncio.gather(*[
+                front.submit_async(r, deadline_ms=args.slo_deadline_ms)
+                for r in reqs])
+
+        done = asyncio.run(run_async())
+        ticks = engine.stats()["ticks"]
+        print("slo:", json.dumps(front.metrics(), indent=1))
+    else:
+        for r in reqs:
+            engine.submit(r)
+        done, ticks = engine.drain()
     stats = engine.stats()
     print(f"arch={args.arch} slots={args.slots} scheduler={args.scheduler} "
           f"chunk={engine.prefill_chunk}: served {stats['completed']} requests "

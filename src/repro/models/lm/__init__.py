@@ -11,9 +11,12 @@ from .model import (  # noqa: F401
     FULL_WINDOW,
     init_cache,
     init_lm,
+    init_paged_cache,
     layer_windows,
     lm_decode_step,
     lm_forward,
+    lm_paged_decode_step,
+    lm_paged_prefill_chunk,
     lm_prefill_chunk,
 )
 from .moe import init_moe, moe_apply  # noqa: F401

@@ -478,6 +478,251 @@ def _attn_prefill_chunk(ap, h, layer_cache, q_pos, write_slot, window,
     return out, new
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (block-table gather / masked-scatter serving path)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(
+    cfg: LMArchConfig,
+    batch: int,
+    num_blocks: int,
+    block_size: int,
+    max_len: int,
+    dtype=jnp.float32,
+) -> Dict:
+    """Paged decode cache: KV rows live in ``num_blocks`` fixed-size
+    blocks instead of per-slot ``(batch, W)`` strips.  One physical block
+    id addresses all L layers at once (leading-L storage), so a block
+    table is a single ``(batch, W // block_size)`` int32 array shared by
+    every layer.
+
+    Block 0 is reserved as the *null block*: its ``kv_pos`` stays -1
+    forever, so unallocated table entries gather an all-masked view.
+    ``ssd_state`` (O(1) recurrent state) is not paged — it stays a dense
+    per-slot array exactly as in :func:`init_cache`.
+    """
+    L = cfg.n_layers
+    cache: Dict = {"step": jnp.zeros((batch,), jnp.int32)}
+    if cfg.mixer in ("attn", "hymba"):
+        W = max_len if cfg.attn_window <= 0 else min(max_len, cfg.attn_window)
+        if W % block_size:
+            raise ValueError(
+                f"cache width {W} (max_len/window) must be a multiple of "
+                f"block_size {block_size}")
+        if cfg.mla_kv_lora:
+            cache["c_kv"] = jnp.zeros((L, num_blocks, block_size, cfg.mla_kv_lora), dtype)
+            cache["k_rope"] = jnp.zeros((L, num_blocks, block_size, cfg.mla_rope_dim), dtype)
+        else:
+            cache["k"] = jnp.zeros((L, num_blocks, cfg.n_kv_heads, block_size, cfg.hd), dtype)
+            cache["v"] = jnp.zeros((L, num_blocks, cfg.n_kv_heads, block_size, cfg.hd), dtype)
+        cache["kv_pos"] = jnp.full((L, num_blocks, block_size), -1, jnp.int32)
+    if cfg.mixer in ("ssd", "hymba"):
+        cache["ssd_state"] = jnp.zeros(
+            (L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+    return cache
+
+
+def _paged_view(lbc: Dict, block_table: jnp.ndarray) -> Dict:
+    """Gather one layer's dense ``(B, ..., W, ...)`` cache view out of its
+    block arrays via the block table.  The view is fed to the *exact*
+    dense ``_attn_decode`` / ``_attn_prefill_chunk`` — blocks mapped from
+    the null block (or stale rows) carry ``kv_pos == -1`` and the mask in
+    ``chunk_attention`` replaces their scores with NEG_INF outright, so
+    the paged path stays bit-identical to the dense cache path."""
+    B, nbt = block_table.shape
+    bs = lbc["kv_pos"].shape[-1]
+    W = nbt * bs
+    view = {"kv_pos": lbc["kv_pos"][block_table].reshape(B, W)}
+    if "c_kv" in lbc:
+        view["c_kv"] = lbc["c_kv"][block_table].reshape(B, W, lbc["c_kv"].shape[-1])
+        view["k_rope"] = lbc["k_rope"][block_table].reshape(B, W, lbc["k_rope"].shape[-1])
+    else:
+        k = lbc["k"][block_table]                       # (B, nbt, Hk, bs, hd)
+        view["k"] = k.transpose(0, 2, 1, 3, 4).reshape(B, k.shape[2], W, k.shape[4])
+        v = lbc["v"][block_table]
+        view["v"] = v.transpose(0, 2, 1, 3, 4).reshape(B, v.shape[2], W, v.shape[4])
+    return view
+
+
+def _paged_scatter(lbc: Dict, upd: Dict, block_table: jnp.ndarray,
+                   rows: jnp.ndarray, valid: jnp.ndarray) -> Dict:
+    """Scatter the rows a dense step just wrote (``rows``: (B, K) ring
+    rows, ``valid``: (B, K)) from the updated dense view back into the
+    layer's block arrays.  Invalid rows route to sentinel block id Nb and
+    are dropped — the null block and shared blocks are never written
+    through an inactive or padding row."""
+    B, K = rows.shape
+    Nb = lbc["kv_pos"].shape[0]
+    bs = lbc["kv_pos"].shape[-1]
+    W = block_table.shape[1] * bs
+    b_idx = jnp.arange(B)[:, None]                       # (B, 1)
+    rows_c = jnp.clip(rows, 0, W - 1)
+    wb = jnp.where(valid, block_table[b_idx, rows_c // bs], Nb)
+    wo = jnp.mod(rows_c, bs)
+    new = dict(lbc)
+    new["kv_pos"] = lbc["kv_pos"].at[wb, wo].set(
+        upd["kv_pos"][b_idx, rows_c], mode="drop")
+    if "c_kv" in lbc:
+        new["c_kv"] = lbc["c_kv"].at[wb, wo].set(
+            upd["c_kv"][b_idx, rows_c], mode="drop")
+        new["k_rope"] = lbc["k_rope"].at[wb, wo].set(
+            upd["k_rope"][b_idx, rows_c], mode="drop")
+    else:
+        new["k"] = lbc["k"].at[wb, :, wo].set(
+            upd["k"][b_idx, :, rows_c], mode="drop")
+        new["v"] = lbc["v"].at[wb, :, wo].set(
+            upd["v"][b_idx, :, rows_c], mode="drop")
+    return new
+
+
+def lm_paged_decode_step(
+    params: Dict,
+    cache: Dict,
+    block_table: jnp.ndarray,   # (B, W // block_size) physical block ids
+    active: jnp.ndarray,        # (B,) bool: slot holds a live request
+    tokens: jnp.ndarray,        # (B,) next token ids
+    cfg: LMArchConfig,
+    policy: PrecisionPolicy = FULL,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One paged serve step: gather each layer's dense view from the
+    block arrays, run the *exact* dense :func:`_attn_decode`, scatter the
+    written row back.  Identical einsum shapes => identical HLO => logits
+    bit-identical to :func:`lm_decode_step` over an equivalently-filled
+    dense cache.  ``active`` masks the write-back only (inactive slots
+    must not touch the null block their table entries point at)."""
+    dtype = policy.at("lm/dense").compute_dtype
+    router_dtype = policy.at("lm/router").compute_dtype
+    head_dtype = policy.at("lm/proj_out").compute_dtype
+    pos = cache["step"]                          # (B,)
+    h = params["embed"][tokens].astype(dtype)   # (B, d)
+    windows = layer_windows(cfg)
+
+    bs = cache["kv_pos"].shape[-1]
+    W = block_table.shape[1] * bs
+    rows = jnp.mod(pos, W)[:, None]              # (B, 1)
+    valid = active[:, None]                      # (B, 1)
+    xs_cache = {k: cache[k] for k in cache if k != "step"}
+
+    def block(h, layer_in):
+        lp, window, lc = layer_in
+        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        new_lc = dict(lc)
+        if cfg.mixer == "attn":
+            view = _paged_view(lc, block_table)
+            mix, upd = _attn_decode(lp["attn"], hn, view, pos, window, cfg, dtype)
+            new_lc.update(_paged_scatter(lc, upd, block_table, rows, valid))
+        elif cfg.mixer == "ssd":
+            mix, new_state = ssd_decode_step(lp["ssd"], hn, lc["ssd_state"], cfg, policy)
+            new_lc["ssd_state"] = new_state
+        else:
+            view = _paged_view(lc, block_table)
+            a, upd = _attn_decode(lp["attn"], hn, view, pos, window, cfg, dtype)
+            s, new_state = ssd_decode_step(lp["ssd"], hn, lc["ssd_state"], cfg, policy)
+            mix = 0.5 * (a + s)
+            new_lc.update(_paged_scatter(lc, upd, block_table, rows, valid))
+            new_lc["ssd_state"] = new_state
+        h = h + mix
+        hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if "ffn" in lp:
+            if cfg.moe_experts:
+                f, _ = moe_apply(lp["ffn"], hn, cfg.moe_top_k, cfg.capacity_factor,
+                                 dtype, router_dtype=router_dtype)
+            else:
+                f = swiglu(lp["ffn"], hn, dtype)
+            h = h + f
+        return h, new_lc
+
+    h, new_xs = jax.lax.scan(block, h, (params["layers"], windows, xs_cache))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", h.astype(head_dtype), unembed.astype(head_dtype))
+    new_cache = dict(new_xs)
+    new_cache["step"] = pos + 1
+    return logits, new_cache
+
+
+def lm_paged_prefill_chunk(
+    params: Dict,
+    cache: Dict,
+    block_table: jnp.ndarray,   # (B, W // block_size) physical block ids
+    tokens: jnp.ndarray,        # (B, K) next chunk of token ids per slot
+    n_valid: jnp.ndarray,       # (B,) valid prefix length per slot (0..K)
+    cfg: LMArchConfig,
+    policy: PrecisionPolicy = FULL,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Paged chunked prefill: the block-table twin of
+    :func:`lm_prefill_chunk` (gather view -> exact dense chunk step ->
+    masked scatter).  Slots with ``n_valid == 0`` neither write nor
+    advance, so no ``active`` mask is needed here."""
+    dtype = policy.at("lm/dense").compute_dtype
+    router_dtype = policy.at("lm/router").compute_dtype
+    head_dtype = policy.at("lm/proj_out").compute_dtype
+    B, K = tokens.shape
+    pos0 = cache["step"]                                  # (B,)
+    j = jnp.arange(K)
+    q_pos = pos0[:, None] + j[None, :]                    # (B, K)
+    valid = j[None, :] < n_valid[:, None]                 # (B, K)
+
+    h = params["embed"][tokens].astype(dtype)             # (B, K, d)
+    h = jnp.where(valid[..., None], h, 0)                 # padding rows inert
+    windows = layer_windows(cfg)
+
+    bs = cache["kv_pos"].shape[-1]
+    W = block_table.shape[1] * bs
+    rows = jnp.mod(q_pos, W)                              # (B, K)
+    # dense-view write slot; W (out of bounds) drops padding writes
+    write_slot = jnp.where(valid, rows, W)
+    xs_cache = {k: cache[k] for k in cache if k != "step"}
+
+    def block(h, layer_in):
+        lp, window, lc = layer_in
+        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        new_lc = dict(lc)
+        if cfg.mixer == "attn":
+            view = _paged_view(lc, block_table)
+            mix, upd = _attn_prefill_chunk(lp["attn"], hn, view, q_pos,
+                                           write_slot, window, cfg, dtype)
+            new_lc.update(_paged_scatter(lc, upd, block_table, rows, valid))
+        elif cfg.mixer == "ssd":
+            mix, new_state = _ssd_prefill_chunk(lp["ssd"], hn, lc["ssd_state"],
+                                                valid, cfg, policy)
+            new_lc["ssd_state"] = new_state
+        else:
+            view = _paged_view(lc, block_table)
+            a, upd = _attn_prefill_chunk(lp["attn"], hn, view, q_pos,
+                                         write_slot, window, cfg, dtype)
+            s, new_state = _ssd_prefill_chunk(lp["ssd"], hn, lc["ssd_state"],
+                                              valid, cfg, policy)
+            mix = 0.5 * (a + s)
+            new_lc.update(_paged_scatter(lc, upd, block_table, rows, valid))
+            new_lc["ssd_state"] = new_state
+        h = h + mix
+        hn = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if "ffn" in lp:
+            if cfg.moe_experts:
+                f, _ = moe_apply(lp["ffn"], hn.reshape(B * K, -1), cfg.moe_top_k,
+                                 cfg.capacity_factor, dtype,
+                                 router_dtype=router_dtype)
+                f = f.reshape(B, K, -1)
+            else:
+                f = swiglu(lp["ffn"], hn, dtype)
+            h = h + f
+        return h, new_lc
+
+    h, new_xs = jax.lax.scan(block, h, (params["layers"], windows, xs_cache))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    last = jnp.clip(n_valid - 1, 0, K - 1)
+    h_last = h[jnp.arange(B), last]                       # (B, d)
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", h_last.astype(head_dtype),
+                        unembed.astype(head_dtype))
+    new_cache = dict(new_xs)
+    new_cache["step"] = pos0 + n_valid
+    return logits, new_cache
+
+
 def _ssd_prefill_chunk(sp, h, state0, valid, cfg: LMArchConfig, policy):
     """Scan the exact one-token SSD recurrence over the K chunk positions
     (state updates masked for padding tokens) — bit-identical to feeding

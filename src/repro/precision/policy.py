@@ -23,6 +23,8 @@ Canonical site vocabulary (patterns in the rule tables address these):
   ``<model>/proj_out``              output heads (f32 by default)
   ``lm/router``                     MoE router (f32 by default)
   ``serve/kv_cache``                KV-cache storage dtype
+  ``serve/paged/kv_blocks``         paged KV block storage dtype
+  ``serve/paged/pool``              block-pool gauges (telemetry tap)
   ``serve/sampler``                 sampling softmax/filter math (f32)
   ``serve/operator``                operator-inference transport dtype
   ``train/loss_scale``              dynamic-loss-scaling switch
@@ -256,6 +258,9 @@ def _amp_rules(half) -> Tuple[Entry, ...]:
     return (
         ("*/dense", SiteRule(compute=half)),
         ("serve/kv_cache", SiteRule(compute=half)),
+        # paged KV blocks follow the dense cache's storage format so the
+        # paged and dense serving paths stay bit-identical per policy
+        ("serve/paged/kv_blocks", SiteRule(compute=half)),
     )
 
 
@@ -325,6 +330,8 @@ CANONICAL_SITES = (
     "model/proj_out",
     "lm/router",
     "serve/kv_cache",
+    "serve/paged/kv_blocks",
+    "serve/paged/pool",
     "serve/sampler",
     "serve/operator",
     "train/loss_scale",

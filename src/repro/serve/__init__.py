@@ -1,15 +1,25 @@
 """repro.serve — the Engine serving API.
 
-One protocol (``submit / tick / drain / stats``) over two engines:
+One protocol (``submit / tick / drain / stats``) over the engines:
 :class:`LMEngine` (continuous-batching LM decode with chunked batched
-prefill and per-request sampling) and :class:`OperatorEngine`
-(micro-batched FNO/SFNO field inference in resolution buckets), both
-fed by a shared :class:`Scheduler` (FCFS / shortest-prompt-first with
-capacity rejection).  ``ServeEngine`` is the pre-v2 alias of
-``LMEngine``.
+prefill and per-request sampling), :class:`PagedLMEngine` (the same
+engine over a paged KV-block cache with copy-on-write prefix sharing),
+and :class:`OperatorEngine` (micro-batched FNO/SFNO field inference in
+resolution buckets with content-hash memoisation), all fed by a shared
+:class:`Scheduler` (FCFS / shortest-prompt-first with capacity
+rejection).  :class:`AsyncServeFrontend` puts ``submit_async`` /
+``stream`` coroutines with deadline accounting in front of any engine's
+tick loop.  ``ServeEngine`` is the pre-v2 alias of ``LMEngine``.
 """
 from .engine import Engine, EngineBase, LMEngine, Request, ServeEngine  # noqa: F401
 from .operator import FieldRequest, OperatorEngine  # noqa: F401
+from .paged import (  # noqa: F401
+    AsyncServeFrontend,
+    BlockPool,
+    PagedLMEngine,
+    PrefixIndex,
+    content_key,
+)
 from .sampler import (  # noqa: F401
     GREEDY,
     SamplingParams,

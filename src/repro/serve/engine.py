@@ -169,6 +169,7 @@ class LMEngine(EngineBase):
         prefill_chunk: Optional[int] = None,
         seed: int = 0,
         telemetry: bool = False,
+        record_logits: bool = False,
     ):
         if prefill_chunk is None:
             # MoE expert-capacity dispatch depends on the dispatch-batch
@@ -195,21 +196,22 @@ class LMEngine(EngineBase):
         self.prefill_chunk = prefill_chunk
         self._base_key = jax.random.PRNGKey(seed)
         self._sampler_site = policy.at("serve/sampler")
-        # KV storage dtype comes from the serve/kv_cache site of the rule
-        # table (f32 under `full` for an exact decode contract; bf16/fp16
-        # under the AMP rule sets for the memory saving).
-        self.cache = init_cache(cfg, n_slots, max_len,
-                                dtype=policy.at("serve/kv_cache").compute_dtype)
+        # dense cache width per slot: SWA archs keep a ring narrower than
+        # max_len; a chunk must never wrap rows still inside an in-chunk
+        # query's window, so the per-slot chunk is clamped to the
+        # remaining un-wrapped rows.
+        if cfg.mixer in ("attn", "hymba"):
+            self._kv_len = max_len if cfg.attn_window <= 0 else min(max_len, cfg.attn_window)
+            self._ring = self._kv_len if cfg.attn_window > 0 else None
+        else:
+            self._kv_len = 0
+            self._ring = None
+        self.cache = self._build_cache()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.slot_pending: List[List[int]] = [[] for _ in range(n_slots)]
         self.slot_pos: List[int] = [0] * n_slots   # host mirror of cache step
-        # SWA archs keep a ring cache narrower than max_len: a chunk must
-        # never wrap rows still inside an in-chunk query's window, so the
-        # per-slot chunk is clamped to the remaining un-wrapped rows.
-        if cfg.mixer in ("attn", "hymba") and cfg.attn_window > 0:
-            self._ring = min(max_len, cfg.attn_window)
-        else:
-            self._ring = None
+        self._record_logits = record_logits
+        self._logits_log: Dict[int, List[np.ndarray]] = {}
         self._n_prompt_tokens = 0
         self._n_generated = 0
         self._prefill_ticks = 0
@@ -222,7 +224,19 @@ class LMEngine(EngineBase):
         self._logits_amax = 0.0
         self._logits_nonfinite = 0
         self._rows_observed = 0
+        self._build_steps()
 
+    # -- build hooks (overridden by the paged engine) --------------------------
+    def _build_cache(self):
+        # KV storage dtype comes from the serve/kv_cache site of the rule
+        # table (f32 under `full` for an exact decode contract; bf16/fp16
+        # under the AMP rule sets for the memory saving).
+        return init_cache(self.cfg, self.n_slots, self.max_len,
+                          dtype=self.policy.at("serve/kv_cache").compute_dtype)
+
+    def _build_steps(self):
+        cfg, policy, mesh = self.cfg, self.policy, self.mesh
+        n_slots, prefill_chunk, params = self.n_slots, self.prefill_chunk, self.params
         decode_fn = lambda p, c, t: lm_decode_step(p, c, t, cfg, policy)
         chunk_fn = lambda p, c, t, n: lm_prefill_chunk(p, c, t, n, cfg, policy)
         if mesh is None:
@@ -277,28 +291,53 @@ class LMEngine(EngineBase):
             )
         return True, ""
 
-    def _reset_slot(self, i: int):
-        """Zero slot i's clock and invalidate its cache rows (continuous
-        batching: other slots keep decoding undisturbed)."""
+    def _admit_slot(self, i: int, req: Request) -> int:
+        """Slot-admission hook; returns the request's starting position
+        (nonzero when a cached prompt prefix lets prefill be skipped —
+        the paged engine's prefix index)."""
+        del i, req
+        return 0
+
+    def _reset_slots(self, admitted: List[Tuple[int, int]]):
+        """Reset the newly admitted slots' clocks and invalidate their
+        cache rows in ONE indexed device update per array (continuous
+        batching: other slots keep decoding undisturbed).  ``admitted``
+        is [(slot, start_pos), ...] — start_pos > 0 for prefix hits."""
+        ids = np.asarray([i for i, _ in admitted], np.int32)
+        starts = np.asarray([s for _, s in admitted], np.int32)
         c = dict(self.cache)
-        c["step"] = c["step"].at[i].set(0)
+        c["step"] = c["step"].at[ids].set(starts)
         if "kv_pos" in c:
-            c["kv_pos"] = c["kv_pos"].at[:, i].set(-1)
+            c["kv_pos"] = c["kv_pos"].at[:, ids].set(-1)
         if "ssd_state" in c:
-            c["ssd_state"] = c["ssd_state"].at[:, i].set(0.0)
+            c["ssd_state"] = c["ssd_state"].at[:, ids].set(0.0)
         self.cache = c
-        self.slot_pos[i] = 0
+
+    def _release_slot(self, i: int):
+        """Slot-release hook (request finished): the paged engine drops
+        its block-table references here."""
+        del i
+
+    def _on_prefill_complete(self, i: int, req: Request):
+        """Called once per request, the tick its last prompt token is
+        consumed (the paged engine registers shared prefix blocks)."""
+        del i, req
 
     def _assign_slots(self):
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
             return
+        admitted: List[Tuple[int, int]] = []
         for i, req in zip(free, self.scheduler.take(len(free), self._ticks),
                           strict=False):
             self.slots[i] = req
-            self._reset_slot(i)
+            start = self._admit_slot(i, req)
+            self.slot_pos[i] = start
             # empty prompts decode from token 0, like the old engine
-            self.slot_pending[i] = list(req.prompt) or [0]
+            self.slot_pending[i] = list(req.prompt)[start:] or [0]
+            admitted.append((i, start))
+        if admitted:
+            self._reset_slots(admitted)
 
     def _observe_logits(self, logits: np.ndarray) -> None:
         """Update host-side numerics counters over the active slots' rows."""
@@ -326,10 +365,21 @@ class LMEngine(EngineBase):
         return sample_token(logits_row, req.sampling, key,
                             site=self._sampler_site)
 
+    def _record(self, req: Request, logits_row: np.ndarray):
+        if self._record_logits:
+            self._logits_log.setdefault(req.uid, []).append(
+                np.array(logits_row, copy=True))
+
+    def logits_for(self, uid: int) -> List[np.ndarray]:
+        """Per-step logits rows recorded for ``uid`` (requires
+        ``record_logits=True``) — the bit-identity tests' observable."""
+        return self._logits_log.get(uid, [])
+
     def _finish_or_continue(self, i: int, req: Request, finished: List[Request]):
         if len(req.generated) >= req.max_new_tokens:
             finished.append(req)
             self.slots[i] = None  # free the slot (continuous batching)
+            self._release_slot(i)
 
     # -- one engine tick -------------------------------------------------------
     def _busy(self) -> bool:
@@ -371,11 +421,7 @@ class LMEngine(EngineBase):
             else:
                 tokens[i, 0] = req.generated[-1]
                 n_valid[i] = 1
-        with use_mesh(self.mesh):
-            logits, self.cache = self._chunk(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(n_valid))
-        logits = np.asarray(logits)
+        logits = self._run_chunk(tokens, n_valid)
         self._observe_logits(logits)
         self._prefill_ticks += 1
         finished: List[Request] = []
@@ -389,12 +435,27 @@ class LMEngine(EngineBase):
                 self._n_prompt_tokens += k
                 if self.slot_pending[i]:
                     continue  # still prefilling this slot
+                self._on_prefill_complete(i, req)
             else:
                 self.slot_pos[i] += 1
+            self._record(req, logits[i])
             req.generated.append(self._next_token(req, logits[i]))
             self._n_generated += 1
             self._finish_or_continue(i, req, finished)
         return finished
+
+    def _run_chunk(self, tokens: np.ndarray, n_valid: np.ndarray) -> np.ndarray:
+        with use_mesh(self.mesh):
+            logits, self.cache = self._chunk(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(n_valid))
+        return np.asarray(logits)
+
+    def _run_decode(self, tokens: np.ndarray) -> np.ndarray:
+        with use_mesh(self.mesh):
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens))
+        return np.asarray(logits)
 
     def _tick_decode(self) -> List[Request]:
         """One fused one-token decode step for the slot pool (also the
@@ -415,10 +476,7 @@ class LMEngine(EngineBase):
                 tokens[i] = self.slot_pending[i][0]
             else:
                 tokens[i] = req.generated[-1]
-        with use_mesh(self.mesh):
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(tokens))
-        logits = np.asarray(logits)
+        logits = self._run_decode(tokens)
         self._observe_logits(logits)
         self._decode_ticks += 1
         finished: List[Request] = []
@@ -433,6 +491,8 @@ class LMEngine(EngineBase):
                     continue  # still prefilling this slot
                 # fall through: the prompt is consumed and this step's
                 # logits are the first generation
+                self._on_prefill_complete(i, req)
+            self._record(req, logits[i])
             req.generated.append(self._next_token(req, logits[i]))
             self._n_generated += 1
             self._finish_or_continue(i, req, finished)

@@ -17,6 +17,7 @@ the acceptance test pins down — so batching is purely a throughput knob.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -27,6 +28,7 @@ from repro.core import PrecisionPolicy, FULL
 from repro.models import fno_infer, sfno_infer
 
 from .engine import EngineBase
+from .paged.prefix import content_key
 from .scheduler import Scheduler
 
 
@@ -76,6 +78,7 @@ class OperatorEngine(EngineBase):
         autoprec=None,
         autoprec_every: int = 4,
         use_pallas: Optional[bool] = None,
+        memo_window: int = 0,
     ):
         if model not in ("fno", "sfno"):
             raise ValueError(f"model must be 'fno' or 'sfno', got {model!r}")
@@ -113,6 +116,17 @@ class OperatorEngine(EngineBase):
             self._telem = TelemetryAggregator()
         self._infer = fno_infer if model == "fno" else sfno_infer
         self._steps: Dict[Tuple[int, ...], Any] = {}   # resolution -> jitted
+        # content-hash memo: identical input fields (by value, under the
+        # active policy) reuse the computed output instead of re-running
+        # the forward.  Sound because inference is a pure function of
+        # (params, field, policy) and micro-batching is per-sample exact
+        # — a memoised answer is bit-identical to a recompute.  LRU over
+        # the last ``memo_window`` distinct fields; 0 disables.
+        self.memo_window = memo_window
+        self._memo: OrderedDict[str, np.ndarray] = OrderedDict()
+        self._memo_hits = 0
+        self._memo_misses = 0
+        self._memo_evictions = 0
         self._n_fields = 0
         self._n_points = 0
         self._n_batches = 0
@@ -163,51 +177,98 @@ class OperatorEngine(EngineBase):
     def _busy(self) -> bool:
         return False  # fields finish within their tick; no carried state
 
+    def _memo_partition(self, batch: List[FieldRequest]
+                        ) -> Tuple[Optional[List[str]], List[int]]:
+        """Split a bucket batch into memoised fields and the indices that
+        still need compute.  In-batch duplicates collapse onto the first
+        occurrence; only that one enters the device batch."""
+        if self.memo_window <= 0:
+            return None, list(range(len(batch)))
+        keys = [content_key(np.asarray(r.x, np.float32)) for r in batch]
+        compute: List[int] = []
+        pending = set()
+        for j, k in enumerate(keys):
+            if k in self._memo:
+                self._memo.move_to_end(k)
+                self._memo_hits += 1
+            elif k in pending:
+                self._memo_hits += 1
+            else:
+                pending.add(k)
+                self._memo_misses += 1
+                compute.append(j)
+        return keys, compute
+
     def _tick_impl(self) -> List[FieldRequest]:
         batch = self.scheduler.take(
             self.max_batch, self._ticks, bucket_key=lambda r: r.resolution)
         self._occupancy_sum += len(batch) / self.max_batch
         if not batch:
             return []
-        xb = jnp.stack([jnp.asarray(r.x, jnp.float32) for r in batch])
-        if len(batch) < self.max_batch:
-            # pad to the fixed micro-batch width: one compiled kernel per
-            # resolution (no recompiles as occupancy fluctuates), and the
-            # per-sample outputs stay independent of batch fill — a solo
-            # request and a full batch produce bit-identical fields.
-            pad = self.max_batch - len(batch)
-            xb = jnp.concatenate([xb, jnp.zeros((pad, *xb.shape[1:]),
-                                                xb.dtype)])
         res = batch[0].resolution
-        yb, telem = self._step_for(res)(self.params, xb)
-        yb = np.asarray(yb)[:len(batch)]
-        self._n_batches += 1
-        if self._telem is not None:
-            self._telem.update(telem)
-            self._window_max_points = max(
-                self._window_max_points, int(np.prod(res, dtype=np.int64)))
-        if (self.controller is not None
-                and self._n_batches % self.autoprec_every == 0):
-            # budget against the finest grid the window saw: with mixed
-            # resolution buckets, the Thm 3.1 bound of the finest field
-            # is the binding one (coarser fields only have more headroom)
-            changed = self.controller.update(
-                self._telem.take_window(),
-                grid_points=self._window_max_points or None)
-            self._window_max_points = 0
-            if changed:
-                # new overlay => new formats: drop the compiled buckets so
-                # the next tick traces under the updated policy
-                self.policy = self.controller.policy()
-                self._steps.clear()
+        keys, compute = self._memo_partition(batch)
+        computed: Dict[str, np.ndarray] = {}
+        if compute:
+            xb = jnp.stack([jnp.asarray(batch[j].x, jnp.float32)
+                            for j in compute])
+            if len(compute) < self.max_batch:
+                # pad to the fixed micro-batch width: one compiled kernel
+                # per resolution (no recompiles as occupancy fluctuates),
+                # and the per-sample outputs stay independent of batch
+                # fill — a solo request and a full batch produce
+                # bit-identical fields.
+                pad = self.max_batch - len(compute)
+                xb = jnp.concatenate([xb, jnp.zeros((pad, *xb.shape[1:]),
+                                                    xb.dtype)])
+            yb, telem = self._step_for(res)(self.params, xb)
+            yb = np.asarray(yb)[:len(compute)]
+            self._n_batches += 1
+            if self._telem is not None:
+                self._telem.update(telem)
+                self._window_max_points = max(
+                    self._window_max_points, int(np.prod(res, dtype=np.int64)))
+            if (self.controller is not None
+                    and self._n_batches % self.autoprec_every == 0):
+                # budget against the finest grid the window saw: with mixed
+                # resolution buckets, the Thm 3.1 bound of the finest field
+                # is the binding one (coarser fields only have more headroom)
+                changed = self.controller.update(
+                    self._telem.take_window(),
+                    grid_points=self._window_max_points or None)
+                self._window_max_points = 0
+                if changed:
+                    # new overlay => new formats: drop the compiled buckets
+                    # so the next tick traces under the updated policy —
+                    # and the memo, whose entries were computed under the
+                    # old formats
+                    self.policy = self.controller.policy()
+                    self._steps.clear()
+                    self._memo.clear()
+            if keys is None:
+                computed = {str(j): yb[pos]
+                            for pos, j in enumerate(compute)}
+            else:
+                computed = {keys[j]: yb[pos]
+                            for pos, j in enumerate(compute)}
         key = "x".join(map(str, res))
         self._bucket_counts[key] = self._bucket_counts.get(key, 0) + len(batch)
         self._n_fields += len(batch)
         self._n_points += int(np.prod(res, dtype=np.int64)) * len(batch)
         finished = []
-        for r, y in zip(batch, yb, strict=True):
-            r.y = y
+        for j, r in enumerate(batch):
+            if keys is None:
+                r.y = computed[str(j)]
+            else:
+                r.y = computed.get(keys[j], self._memo.get(keys[j]))
             finished.append(r)
+        if keys is not None:
+            # admit this tick's fresh results, then LRU-trim — after the
+            # batch is answered, so an admission never evicts a key a
+            # later request in the same tick still needs
+            self._memo.update(computed)
+            while len(self._memo) > self.memo_window:
+                self._memo.popitem(last=False)
+                self._memo_evictions += 1
         return finished
 
     def _extra_stats(self) -> Dict[str, Any]:
@@ -227,6 +288,16 @@ class OperatorEngine(EngineBase):
             "points_per_s": round(self._n_points / self._wall_s, 2)
             if self._wall_s else None,
         }
+        if self.memo_window > 0:
+            seen = self._memo_hits + self._memo_misses
+            out["memo"] = {
+                "window": self.memo_window,
+                "entries": len(self._memo),
+                "hits": self._memo_hits,
+                "misses": self._memo_misses,
+                "hit_rate": round(self._memo_hits / seen, 4) if seen else 0.0,
+                "evictions": self._memo_evictions,
+            }
         if self._telem is not None:
             out["numerics"] = self._telem.counters()
         if self.controller is not None:

@@ -1,0 +1,397 @@
+"""repro.serve.paged tests: BlockPool invariants (property-based),
+prefix sharing, copy-on-write, paged-vs-dense bit-identity across every
+LM arch x scheduler x policy, pool pressure, and the async frontend."""
+import asyncio
+import dataclasses
+import random
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core import get_policy
+from repro.models.lm import init_lm
+from repro.serve import (
+    AsyncServeFrontend,
+    BlockPool,
+    LMEngine,
+    PagedLMEngine,
+    PrefixIndex,
+    Request,
+)
+from repro.serve.paged.pool import NULL_BLOCK
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe_experts:
+        # MoE expert-capacity routing is batch-composition-dependent;
+        # the paged contract (like chunked prefill's) is pinned on the
+        # dense-equivalent archs, so tests strip the experts.
+        cfg = dataclasses.replace(cfg, moe_experts=0, moe_shared=0, d_ff=32)
+    return cfg
+
+
+def _requests():
+    return [
+        Request(uid=u, prompt=[3, 1, 4, 1, 5, 9, 2, 6, 5, 3][: 4 + u % 6],
+                max_new_tokens=3 + u % 3)
+        for u in range(5)
+    ]
+
+
+_PARAMS = {}
+_DENSE = {}
+
+
+def _params_for(arch):
+    if arch not in _PARAMS:
+        cfg = _cfg(arch)
+        _PARAMS[arch] = (cfg, init_lm(jax.random.PRNGKey(0), cfg))
+    return _PARAMS[arch]
+
+
+def _dense_run(arch, policy_name, chunk):
+    """Dense reference run, cached per (arch, policy, chunk) — per-request
+    logits don't depend on the admission order, so one dense run serves
+    both scheduler legs."""
+    key = (arch, policy_name, chunk)
+    if key not in _DENSE:
+        cfg, params = _params_for(arch)
+        eng = LMEngine(params, cfg, n_slots=2, max_len=32,
+                       policy=get_policy(policy_name), prefill_chunk=chunk,
+                       record_logits=True)
+        done, _ = eng.run_until_done(_requests())
+        _DENSE[key] = (
+            {r.uid: list(r.generated) for r in done},
+            {r.uid: eng.logits_for(r.uid) for r in done},
+        )
+    return _DENSE[key]
+
+
+# ---------------------------------------------------------------------------
+# BlockPool
+# ---------------------------------------------------------------------------
+
+
+class TestBlockPool:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    def test_random_workload_invariants(self, seed):
+        """Property: under any interleaving of alloc/fork/release/cow the
+        pool never leaks, never double-frees, and refcounts always equal
+        the number of outstanding owners."""
+        rng = random.Random(seed)
+        pool = BlockPool(num_blocks=12, block_size=4)
+        owners = []  # one entry per outstanding reference
+        for _ in range(200):
+            op = rng.random()
+            if op < 0.4:
+                b = pool.alloc()
+                if b is not None:
+                    assert b != NULL_BLOCK
+                    owners.append(b)
+            elif op < 0.6 and owners:
+                owners.append(pool.fork(rng.choice(owners)))
+            elif op < 0.85 and owners:
+                pool.release(owners.pop(rng.randrange(len(owners))))
+            elif owners:
+                j = rng.randrange(len(owners))
+                b = owners[j]
+                if pool.refcount(b) > 1 and pool.free_blocks == 0:
+                    with pytest.raises(RuntimeError):
+                        pool.cow(b)
+                    continue
+                dst, copy = pool.cow(b)
+                owners[j] = dst
+                # COW of an exclusive block is the identity (no copy)
+                assert (copy is None) == (dst == b)
+            # invariants after every op
+            counts = Counter(owners)
+            for b, n in counts.items():
+                assert pool.refcount(b) == n
+            assert pool.refcount(NULL_BLOCK) == 1
+            assert pool.live_blocks == len(counts)  # null block excluded
+            assert pool.free_blocks == 12 - 1 - len(counts)
+        for b in owners:
+            pool.release(b)
+        assert pool.live_blocks == 0
+
+    def test_double_free_rejected(self):
+        pool = BlockPool(num_blocks=4, block_size=4)
+        b = pool.alloc()
+        assert pool.release(b)
+        with pytest.raises(ValueError, match="not allocated"):
+            pool.release(b)
+
+    def test_null_block_is_reserved(self):
+        pool = BlockPool(num_blocks=4, block_size=4)
+        got = {pool.alloc() for _ in range(3)}
+        assert NULL_BLOCK not in got
+        assert pool.alloc() is None  # exhausted, never hands out block 0
+
+
+class TestPrefixIndex:
+    def test_register_lookup_evict(self):
+        pool = BlockPool(num_blocks=8, block_size=2)
+        idx = PrefixIndex(pool)
+        toks = [1, 2, 3, 4, 5, 6]
+        blocks = [pool.alloc() for _ in range(3)]
+        idx.register(toks, blocks, 2, now=0)
+        # the index holds its own reference on top of ours
+        assert all(pool.refcount(b) == 2 for b in blocks)
+        hit = idx.lookup(toks, 2, max_blocks=3, now=1)
+        assert hit == blocks          # full-chain hit
+        for b in hit:                 # lookup forked: caller owns these
+            pool.release(b)
+        assert idx.lookup([9, 9, 9, 9], 2, max_blocks=2, now=2) == []
+        # leaf-only LRU eviction walks the chain back to the root
+        assert idx.evict_one()
+        assert idx.evict_one()
+        assert idx.evict_one()
+        assert not idx.evict_one()    # empty
+        for b in blocks:
+            pool.release(b)
+        assert pool.live_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# Paged vs dense bit-identity
+# ---------------------------------------------------------------------------
+
+ARCHS = [
+    "smollm-360m",           # pure attention (GQA)
+    "mamba2-370m",           # pure SSD: engine degrades to the dense path
+    "hymba-1.5b",            # hybrid attn+SSD with an SWA ring cache
+    "deepseek-v2-lite-16b",  # MLA latent cache (MoE stripped)
+]
+
+
+class TestPagedBitIdentity:
+    @pytest.mark.parametrize("arch", ARCHS)
+    @pytest.mark.parametrize("sched", ["fcfs", "spf"])
+    @pytest.mark.parametrize("policy_name", ["full", "mixed_fno_bf16"])
+    def test_matches_dense_per_step_logits(self, arch, sched, policy_name):
+        """The acceptance bar: same tokens AND bit-equal per-step logits
+        for every arch x scheduler x policy."""
+        self._check(arch, sched, policy_name, chunk=4)
+
+    @pytest.mark.parametrize("chunk", [1, 8])
+    def test_matches_dense_across_chunk_sizes(self, chunk):
+        self._check("smollm-360m", "fcfs", "full", chunk=chunk)
+
+    def _check(self, arch, sched, policy_name, chunk):
+        cfg, params = _params_for(arch)
+        d_tokens, d_logits = _dense_run(arch, policy_name, chunk)
+        paged = PagedLMEngine(
+            params, cfg, n_slots=2, max_len=32,
+            policy=get_policy(policy_name), scheduler=sched,
+            prefill_chunk=chunk, record_logits=True, block_size=8)
+        p_done, _ = paged.run_until_done(_requests())
+        p_tokens = {r.uid: list(r.generated) for r in p_done}
+        assert p_tokens == d_tokens
+        for uid, rows in d_logits.items():
+            got = paged.logits_for(uid)
+            assert len(got) == len(rows)
+            for t, (a, b) in enumerate(zip(rows, got, strict=True)):
+                assert np.array_equal(a, b), (uid, t)
+
+    def test_ssd_arch_degrades_to_dense(self):
+        cfg, params = _params_for("mamba2-370m")
+        eng = PagedLMEngine(params, cfg, n_slots=2, max_len=32, block_size=8)
+        assert eng.pool is None
+        assert eng.stats()["paged"] == {
+            "active": False, "reason": "ssd arch has no KV rows"}
+
+    def test_block_size_must_divide_cache_width(self):
+        cfg, params = _params_for("smollm-360m")
+        with pytest.raises(ValueError, match="block_size"):
+            PagedLMEngine(params, cfg, n_slots=2, max_len=32, block_size=7)
+
+    def test_mesh_rejected(self):
+        cfg, params = _params_for("smollm-360m")
+        with pytest.raises(ValueError, match="single-host"):
+            PagedLMEngine(params, cfg, mesh=object())
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing + COW
+# ---------------------------------------------------------------------------
+
+
+class TestPrefixSharing:
+    def test_shared_prefix_skips_prefill_bit_identically(self):
+        """Requests repeating a 16-token prefix: the paged engine must
+        serve them with prefix hits and strictly fewer prefill tokens,
+        while every generation stays bit-identical to dense."""
+        cfg, params = _params_for("smollm-360m")
+        shared = [7, 3, 9, 2, 8, 1, 4, 6, 5, 0, 2, 9, 1, 3, 4, 8]
+        reqs = lambda: [Request(uid=u, prompt=shared + [u + 1, u + 2],  # noqa: E731
+                                max_new_tokens=4) for u in range(6)]
+        dense = LMEngine(params, cfg, n_slots=2, max_len=32,
+                         prefill_chunk=4, record_logits=True)
+        d_done, _ = dense.run_until_done(reqs())
+        paged = PagedLMEngine(params, cfg, n_slots=2, max_len=32,
+                              prefill_chunk=4, record_logits=True,
+                              block_size=8)
+        p_done, _ = paged.run_until_done(reqs())
+        assert ({r.uid: r.generated for r in p_done}
+                == {r.uid: r.generated for r in d_done})
+        for r in d_done:
+            for a, b in zip(dense.logits_for(r.uid),
+                            paged.logits_for(r.uid), strict=True):
+                assert np.array_equal(a, b)
+        ps, ds = paged.stats(), dense.stats()
+        prefix = ps["paged"]["prefix"]
+        assert prefix["hits"] > 0 and prefix["tokens_reused"] > 0
+        assert ps["prompt_tokens"] < ds["prompt_tokens"]
+        # shared blocks mean fewer distinct physical blocks than
+        # unshared backing would need
+        assert ps["paged"]["peak_live_blocks"] < 6 * (32 // 8) + 1
+
+    def test_prefix_disabled_still_bit_identical(self):
+        cfg, params = _params_for("smollm-360m")
+        shared = [7, 3, 9, 2, 8, 1, 4, 6, 5, 0, 2, 9, 1, 3, 4, 8]
+        reqs = lambda: [Request(uid=u, prompt=shared + [u + 1],  # noqa: E731
+                                max_new_tokens=3) for u in range(3)]
+        on = PagedLMEngine(params, cfg, n_slots=2, max_len=32,
+                           prefill_chunk=4, block_size=8)
+        off = PagedLMEngine(params, cfg, n_slots=2, max_len=32,
+                            prefill_chunk=4, block_size=8,
+                            prefix_sharing=False)
+        a, _ = on.run_until_done(reqs())
+        b, _ = off.run_until_done(reqs())
+        assert ({r.uid: r.generated for r in a}
+                == {r.uid: r.generated for r in b})
+        assert off.stats()["paged"]["prefix"] == {"enabled": False}
+
+    def test_cow_on_divergent_write(self):
+        """Force a write into a shared block: the engine must COW (fresh
+        block, device copy of the already-written rows) and keep the
+        generation bit-identical to dense."""
+        cfg, params = _params_for("smollm-360m")
+        req = Request(uid=0, prompt=[3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8],
+                      max_new_tokens=4)
+        dense = LMEngine(params, cfg, n_slots=1, max_len=32,
+                         prefill_chunk=4, record_logits=True)
+        d_done, _ = dense.run_until_done(
+            [Request(uid=0, prompt=list(req.prompt), max_new_tokens=4)])
+        paged = PagedLMEngine(params, cfg, n_slots=1, max_len=32,
+                              prefill_chunk=4, record_logits=True,
+                              block_size=8)
+        paged.submit(req)
+        for _ in range(3):  # 12 prompt tokens / chunk 4 = 3 prefill ticks
+            paged.tick()
+        # rows 8..11 live in logical block 1; share it out from under the
+        # engine (as a prefix entry would) before row 12 is written
+        shared = int(paged._bt[0, 1])
+        paged.pool.fork(shared)
+        while req.status != "done":
+            paged.tick()
+        assert int(paged._bt[0, 1]) != shared     # COW swapped the block
+        assert paged.pool.cow_copies == 1
+        assert paged.pool.refcount(shared) == 1   # ours now; engine let go
+        paged.pool.release(shared)
+        assert req.generated == d_done[0].generated
+        for a, b in zip(dense.logits_for(0), paged.logits_for(0),
+                        strict=True):
+            assert np.array_equal(a, b)
+
+
+class TestPoolPressure:
+    def test_eviction_keeps_serving(self):
+        """A pool with barely more than one slot's backing: as requests
+        with *distinct* prefixes accumulate index entries, allocation
+        pressure must LRU-evict them instead of wedging."""
+        cfg, params = _params_for("smollm-360m")
+        mk = lambda: [Request(uid=u, prompt=[u + 1] * 8 + [1, 2],  # noqa: E731
+                              max_new_tokens=3) for u in range(5)]
+        paged = PagedLMEngine(params, cfg, n_slots=1, max_len=32,
+                              prefill_chunk=4, block_size=8, num_blocks=6)
+        done, _ = paged.run_until_done(mk())
+        assert all(r.status == "done" for r in done)
+        assert paged.stats()["paged"]["prefix"]["evictions"] > 0
+        dense = LMEngine(params, cfg, n_slots=1, max_len=32, prefill_chunk=4)
+        d_done, _ = dense.run_until_done(mk())
+        assert ({r.uid: r.generated for r in done}
+                == {r.uid: r.generated for r in d_done})
+
+    def test_true_exhaustion_raises(self):
+        cfg, params = _params_for("smollm-360m")
+        paged = PagedLMEngine(params, cfg, n_slots=2, max_len=32,
+                              prefill_chunk=4, block_size=8, num_blocks=4,
+                              prefix_sharing=False)
+        for u in range(2):
+            paged.submit(Request(uid=u, prompt=[1, 2, 3, 4, 5, 6, 7, 8, 9],
+                                 max_new_tokens=4))
+        with pytest.raises(RuntimeError, match="pool exhausted"):
+            paged.drain()
+
+
+# ---------------------------------------------------------------------------
+# Async frontend
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncFrontend:
+    def test_submit_stream_and_deadlines(self):
+        cfg, params = _params_for("smollm-360m")
+        engine = PagedLMEngine(params, cfg, n_slots=2, max_len=32,
+                               prefill_chunk=4, block_size=8)
+        ref = LMEngine(params, cfg, n_slots=2, max_len=32, prefill_chunk=4)
+        r_done, _ = ref.run_until_done(
+            [Request(uid=u, prompt=[2, 7, 1, 8, 2, 8], max_new_tokens=4)
+             for u in range(2)])
+        want = {r.uid: r.generated for r in r_done}
+
+        async def main():
+            front = AsyncServeFrontend(engine)
+            streamed = []
+
+            async def consume():
+                async for tok in front.stream(
+                        Request(uid=1, prompt=[2, 7, 1, 8, 2, 8],
+                                max_new_tokens=4)):
+                    streamed.append(tok)
+
+            a = front.submit_async(
+                Request(uid=0, prompt=[2, 7, 1, 8, 2, 8], max_new_tokens=4),
+                deadline_ms=0.0)  # impossible deadline => accounted miss
+            done0, _ = await asyncio.gather(a, consume())
+            return front, done0, streamed
+
+        front, done0, streamed = asyncio.run(main())
+        assert done0.status == "done"
+        assert done0.generated == want[0]
+        assert streamed == want[1]
+        m = front.metrics()
+        assert m["requests"] == 2 and m["completed"] == 2
+        assert m["deadline_misses"] == 1 and m["deadline_miss_rate"] == 1.0
+        assert m["latency_ms"]["p99"] >= m["latency_ms"]["p50"] > 0
+        recs = {r["uid"]: r for r in front.records}
+        assert recs[0]["deadline_missed"] is True
+        assert recs[1]["deadline_missed"] is False
+        assert recs[0]["ttft_ms"] is not None
+
+    def test_duplicate_uid_rejected(self):
+        cfg, params = _params_for("smollm-360m")
+        engine = PagedLMEngine(params, cfg, n_slots=1, max_len=32,
+                               block_size=8)
+
+        async def main():
+            front = AsyncServeFrontend(engine)
+            t = asyncio.ensure_future(front.submit_async(
+                Request(uid=7, prompt=[1, 2, 3], max_new_tokens=2)))
+            await asyncio.sleep(0)
+            with pytest.raises(ValueError, match="already in flight"):
+                await front.submit_async(
+                    Request(uid=7, prompt=[4, 5], max_new_tokens=2))
+            await t
+
+        asyncio.run(main())
