@@ -31,6 +31,8 @@ from repro.core.spectral import _cp_exprs, _dense_expr
 from repro.kernels import ops
 from repro.kernels.spectral_contract import (
     cp_vmem_bytes, pick_block_m, vmem_bytes, vmem_bytes_bwd)
+from repro.launch.roofline import HBM_BW
+from repro.tune.measure import bytes_moved
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "kernels.json")
 
@@ -53,7 +55,8 @@ def _temp_bytes(fn, *args) -> int:
     return int(getattr(mem, "temp_size_in_bytes", 0) or 0)
 
 
-def bench_case(name: str, policy_name: str, seed: int = 0) -> dict:
+def bench_case(name: str, policy_name: str, seed: int = 0,
+               tuned_leg: bool = False) -> dict:
     B, I, O, modes = CASES[name]
     kind = name.split("-")[0]
     ndim = len(modes)
@@ -77,26 +80,34 @@ def bench_case(name: str, policy_name: str, seed: int = 0) -> dict:
         operands = (w,)
         expr = _dense_expr(ndim)
 
-        def pallas_loss(x, *ws):
-            y = ops.spectral_contract(x, ws[0], policy=site, block_m=block_m)
-            return _abs2(y)
+        def pallas_loss_at(block):
+            def loss(x, *ws):
+                y = ops.spectral_contract(x, ws[0], policy=site,
+                                          block_m=block)
+                return _abs2(y)
+            return loss
 
         vmem = {"fwd": vmem_bytes(B, I, O, block_m),
                 "bwd": vmem_bytes_bwd(B, I, O, block_m)}
+        traffic_shape = (B, I, O, M)
     else:
         operands = (_randc(rng, (R,)), _randc(rng, (I, R)),
                     _randc(rng, (O, R)),
                     *[_randc(rng, (m, R)) for m in modes])
         expr = _cp_exprs(ndim)
 
-        def pallas_loss(x, *ws):
-            y = ops.spectral_contract_cp(x, ws[0], ws[1], ws[2],
-                                         list(ws[3:]), policy=site,
-                                         block_m=block_m)
-            return _abs2(y)
+        def pallas_loss_at(block):
+            def loss(x, *ws):
+                y = ops.spectral_contract_cp(x, ws[0], ws[1], ws[2],
+                                             list(ws[3:]), policy=site,
+                                             block_m=block)
+                return _abs2(y)
+            return loss
 
         vmem = {"fwd": cp_vmem_bytes(B, I, O, R, block_m),
                 "bwd": cp_vmem_bytes(B, I, O, R, block_m)}
+        traffic_shape = (B, I, O, R, M)
+    pallas_loss = pallas_loss_at(block_m)
 
     def _abs2(y):
         if hasattr(y, "abs2"):
@@ -112,18 +123,40 @@ def bench_case(name: str, policy_name: str, seed: int = 0) -> dict:
         "block_m": block_m, "vmem_bytes": vmem,
         "interpret": jax.default_backend() != "tpu",
     }
-    for label, loss in (("einsum", einsum_loss), ("pallas", pallas_loss)):
+    # HBM traffic model for one fwd+bwd step (repro.tune's bytes-moved
+    # model at the policy's storage itemsize) — normalises walls into
+    # achieved GB/s and a roofline-bandwidth fraction per row
+    dtype_name = jnp.dtype(half).name
+    moved = bytes_moved(kind, traffic_shape, dtype_name)
+    row["bytes_moved"] = moved
+
+    legs = [("einsum", einsum_loss), ("pallas", pallas_loss)]
+    if tuned_leg:
+        # tuned leg: block_m=None routes tile resolution through the
+        # active calibration cache (heuristic fallback per miss)
+        legs.append(("pallas_tuned", pallas_loss_at(None)))
+    for label, loss in legs:
         fwd = jax.jit(loss)
         bwd = jax.jit(jax.value_and_grad(loss, argnums=(0,)))
-        row[label] = {
+        entry = {
             "fwd_us": time_fn(fwd, x, *operands),
             "fwd_bwd_us": time_fn(bwd, x, *operands),
             "fwd_temp_bytes": _temp_bytes(loss, x, *operands),
             "fwd_bwd_temp_bytes": _temp_bytes(
                 jax.value_and_grad(loss, argnums=(0,)), x, *operands),
         }
+        if label != "einsum":
+            gbps = moved / (entry["fwd_bwd_us"] * 1e-6) / 1e9
+            entry["gbps"] = round(gbps, 3)
+            entry["roofline_fraction"] = round(gbps / (HBM_BW / 1e9), 6)
+        row[label] = entry
     row["pallas_over_einsum_wall"] = round(
         row["pallas"]["fwd_bwd_us"] / max(row["einsum"]["fwd_bwd_us"], 1e-9), 3)
+    if tuned_leg:
+        row["tiles"] = ops.tile_resolution_stats()
+        row["tuned_over_heuristic_wall"] = round(
+            row["pallas_tuned"]["fwd_bwd_us"]
+            / max(row["pallas"]["fwd_bwd_us"], 1e-9), 3)
     return row
 
 
@@ -132,24 +165,41 @@ def main():
     ap.add_argument("--policy", nargs="*",
                     default=["full", "mixed_fno_bf16"])
     ap.add_argument("--case", nargs="*", default=sorted(CASES))
+    ap.add_argument("--calibration-state", default=None,
+                    help="activate a repro.tune state and add a tuned-"
+                         "tiles comparison leg per row")
     args = ap.parse_args()
+
+    tuned_leg = args.calibration_state is not None
+    if tuned_leg:
+        from repro.tune.cache import activate
+
+        activate(args.calibration_state)
 
     rows = []
     print(f"== bench_kernels (backend={jax.default_backend()}) ==")
     print(f"{'case':>10s} {'policy':>16s} {'einsum f+b us':>14s} "
-          f"{'pallas f+b us':>14s} {'ratio':>7s} {'temp MiB e/p':>14s}")
+          f"{'pallas f+b us':>14s} {'ratio':>7s} {'GB/s':>7s} "
+          f"{'temp MiB e/p':>14s}")
     for case in args.case:
         for pol in args.policy:
-            row = bench_case(case, pol)
+            row = bench_case(case, pol, tuned_leg=tuned_leg)
             rows.append(row)
             print(f"{case:>10s} {pol:>16s} "
                   f"{row['einsum']['fwd_bwd_us']:>14.0f} "
                   f"{row['pallas']['fwd_bwd_us']:>14.0f} "
                   f"{row['pallas_over_einsum_wall']:>7.2f} "
+                  f"{row['pallas']['gbps']:>7.2f} "
                   f"{row['einsum']['fwd_bwd_temp_bytes'] / 2**20:>6.1f}/"
                   f"{row['pallas']['fwd_bwd_temp_bytes'] / 2**20:<6.1f}")
+            if tuned_leg:
+                print(f"{'':>10s} {'(tuned tiles)':>16s} {'':>14s} "
+                      f"{row['pallas_tuned']['fwd_bwd_us']:>14.0f} "
+                      f"{row['tuned_over_heuristic_wall']:>7.2f} "
+                      f"{row['pallas_tuned']['gbps']:>7.2f}")
 
-    report = {"backend": jax.default_backend(), "rows": rows}
+    report = {"backend": jax.default_backend(),
+              "calibration_state": args.calibration_state, "rows": rows}
     os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
     with open(RESULTS, "w") as f:
         json.dump(report, f, indent=1)

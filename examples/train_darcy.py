@@ -31,6 +31,11 @@ def main():
                          "telemetry-driven controller: per-site formats "
                          "follow runtime amax/overflow counters plus the "
                          "Thm 3.1/3.2 budgets")
+    ap.add_argument("--calibration-state", default=None,
+                    help="repro.tune calibration-state JSON: spectral "
+                         "tile resolution serves validated tuned tiles "
+                         "instead of the static heuristic (default: "
+                         "$REPRO_CALIBRATION_STATE if set)")
     args = ap.parse_args()
 
     print("generating Darcy data (CG solver)...")
@@ -70,6 +75,7 @@ def main():
             schedule=schedule, autoprec=autoprec,
             optimizer=AdamW(lr=2e-3, weight_decay=1e-5),
             ckpt_dir=ckpt_dir, ckpt_every=20,
+            calibration_state=args.calibration_state,
         )
         trainer = Trainer(loss_fn, params, tcfg)
         trainer.install_preemption_handler()

@@ -60,8 +60,12 @@ def main(argv=None) -> int:
     ap.add_argument("--no-trainer", action="store_true",
                     help="skip the full-Trainer-step traces")
     ap.add_argument("--skip", nargs="*", default=[],
-                    choices=("dataflow", "sites", "kernels"),
+                    choices=("dataflow", "sites", "kernels", "calibration"),
                     help="passes to skip")
+    ap.add_argument("--calibration-state", default=None,
+                    help="calibration-state JSON to lint for tile "
+                         "coverage (default: $REPRO_CALIBRATION_STATE; "
+                         "the check is skipped when neither is set)")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="findings report path (JSON)")
     ap.add_argument("--suppressions", default=DEFAULT_SUPPRESSIONS,
@@ -95,6 +99,14 @@ def main(argv=None) -> int:
         from .kernels import kernels_pass
 
         findings.extend(kernels_pass())
+    if "calibration" not in args.skip:
+        cal_path = (args.calibration_state
+                    or os.environ.get("REPRO_CALIBRATION_STATE"))
+        if cal_path:
+            print(f"[analyze] calibration: tile coverage of {cal_path}")
+            from .kernels import calibration_pass
+
+            findings.extend(calibration_pass(cal_path))
 
     findings = dedupe(findings)
     suppressions = load_suppressions(args.suppressions)

@@ -229,6 +229,10 @@ def _sds(*shape):
     return jax.ShapeDtypeStruct(shape, _DT)
 
 
+def _sds32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
 def _unwrap(fn):
     # the public entry points are jit'd (static block/interpret args);
     # trace the underlying function so the recorder always sees the
@@ -271,6 +275,14 @@ def kernel_families() -> List[Tuple[str, Callable[[], List[KernelCall]], Callabl
         block_m=_BLOCK_M, interpret=True, out_dtype=_DT)
     dense_args = (_sds(_B, _I, _M), _sds(_B, _I, _M),
                   _sds(_I, _O, _M), _sds(_I, _O, _M))
+    # the fused-cast variant streams f32 operand tiles and rounds onto
+    # the half grid in the tile prologue — its working set prices at
+    # itemsize 4
+    dense_fused = functools.partial(
+        _unwrap(spectral_contract_pallas),
+        block_m=_BLOCK_M, interpret=True, out_dtype=_DT, cast_to=_DT)
+    dense_fused_args = (_sds32(_B, _I, _M), _sds32(_B, _I, _M),
+                        _sds32(_I, _O, _M), _sds32(_I, _O, _M))
     cp = functools.partial(
         _unwrap(spectral_contract_cp_pallas),
         block_m=_BLOCK_M, interpret=True, out_dtype=_DT)
@@ -288,6 +300,11 @@ def kernel_families() -> List[Tuple[str, Callable[[], List[KernelCall]], Callabl
          lambda: vmem_bytes(_B, _I, _O, _BLOCK_M, item)),
         ("dense/bwd", lambda: _trace(_grad_sum(dense, 4), *dense_args),
          lambda: vmem_bytes_bwd(_B, _I, _O, _BLOCK_M, item)),
+        ("dense-fused/fwd", lambda: _trace(dense_fused, *dense_fused_args),
+         lambda: vmem_bytes(_B, _I, _O, _BLOCK_M, 4)),
+        ("dense-fused/bwd",
+         lambda: _trace(_grad_sum(dense_fused, 4), *dense_fused_args),
+         lambda: vmem_bytes_bwd(_B, _I, _O, _BLOCK_M, 4)),
         ("cp/fwd", lambda: _trace(cp, *cp_args),
          lambda: cp_vmem_bytes(_B, _I, _O, _R, _BLOCK_M, item)),
         ("cp/bwd", lambda: _trace(_grad_sum(cp, 8), *cp_args),
@@ -297,6 +314,66 @@ def kernel_families() -> List[Tuple[str, Callable[[], List[KernelCall]], Callabl
         ("lshared/bwd", lambda: _trace(_grad_sum(lsh, 4), *lsh_args),
          lambda: lshared_vmem_bytes(_B, _I, _O, _MM, _BLOCK_L, item)),
     ]
+
+
+def calibration_pass(path: Optional[str] = None) -> List[Finding]:
+    """calibration-coverage: every tuned entry in a calibration-state
+    file must be priced under the VMEM budget by its own family's
+    ``*vmem_bytes*`` estimator — the autotuner, the static heuristics
+    and the dry-run ``fits_vmem`` verdicts all share that vocabulary, so
+    an entry the estimators cannot cover is either corrupt or was tuned
+    against a different memory model and must not steer tiling.
+
+    ``path`` defaults to ``$REPRO_CALIBRATION_STATE``; no path means no
+    findings (the check only gates states that would actually be used).
+    """
+    import os
+
+    findings: List[Finding] = []
+    from repro.tune import cache as tcache
+    from repro.tune.space import family_itemsize, tile_vmem_bytes
+    from repro.kernels.spectral_contract import VMEM_BUDGET
+
+    path = path or os.environ.get(tcache.ENV_VAR)
+    if not path:
+        return findings
+    try:
+        state = tcache.load(path)
+    except tcache.CalibrationError as e:
+        findings.append(Finding(
+            pass_name="kernels", check="calibration-coverage",
+            severity=ERROR, site=None, where=str(path), detail=str(e)))
+        return findings
+    for key, ent in sorted(state.entries.items()):
+        where = f"calibration:{key}"
+        if not tcache._entry_ok(ent):
+            findings.append(Finding(
+                pass_name="kernels", check="calibration-coverage",
+                severity=ERROR, site=None, where=where,
+                detail="corrupt entry: unknown family or non-power-of-two "
+                       "block (lookup would skip it; tuner must not have "
+                       "written it)"))
+            continue
+        itemsize = family_itemsize(ent["family"], ent["dtype"])
+        for direction, field in (("fwd", "block_fwd"), ("bwd", "block_bwd")):
+            try:
+                need = tile_vmem_bytes(ent["family"], ent["shape"],
+                                       int(ent[field]), itemsize, direction)
+            except (KeyError, TypeError, ValueError) as e:
+                findings.append(Finding(
+                    pass_name="kernels", check="calibration-coverage",
+                    severity=ERROR, site=None, where=where,
+                    detail=f"{direction} tile not priceable by the family "
+                           f"estimator: {e}"))
+                continue
+            if need > VMEM_BUDGET:
+                findings.append(Finding(
+                    pass_name="kernels", check="calibration-coverage",
+                    severity=ERROR, site=None, where=where,
+                    detail=f"{direction} tile {ent[field]} prices at {need} "
+                           f"B — over the {VMEM_BUDGET} B VMEM budget; the "
+                           f"estimators do not cover this entry"))
+    return findings
 
 
 def kernels_pass() -> List[Finding]:

@@ -59,11 +59,71 @@ def resolve_use_pallas(flag: Optional[bool] = None) -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_fuse_casts(flag: Optional[bool] = None) -> bool:
+    """Resolve the tri-state ``fuse_casts`` setting for the dense path.
+
+    Explicit True/False wins; ``None`` means *auto*: on unless the env
+    var ``REPRO_FUSE_CASTS`` is falsy (kill switch).  When on — and the
+    site quantises to half and the operands arrive as complex (not
+    pre-cast ComplexPairs) — the storage rounding happens inside the
+    kernel's tile prologue instead of as a separate HBM-resident cast.
+    """
+    if flag is not None:
+        return bool(flag)
+    env = os.environ.get("REPRO_FUSE_CASTS")
+    if env is not None and env != "":
+        return env.lower() not in ("0", "false", "no")
+    return True
+
+
 def _site_of(policy, site: str):
     """Resolve a PrecisionPolicy at ``site``; pass SitePrecision through."""
     if isinstance(policy, PrecisionPolicy):
         return policy.at(site)
     return policy
+
+
+#: tile-resolution outcomes since process start, counted at trace time
+#: (one per compiled shape, not per step — jit caches the resolution).
+_TILE_SOURCES = {"heuristic": 0, "calibrated": 0}
+
+
+def _resolve_blocks(family: str, shape: tuple, dtype, heuristic):
+    """Resolve (block_fwd, block_bwd, source) for one kernel launch.
+
+    Consults the active ``repro.tune`` calibration cache first (explicit
+    ``tune.cache.activate(...)`` or the ``REPRO_CALIBRATION_STATE`` env
+    var); entries that are missing, stale (kernel-version or backend
+    mismatch) or corrupt fall back to the static VMEM heuristic — tuning
+    state can degrade the heuristic path's performance only, never its
+    availability.
+    """
+    from repro.tune.cache import active_cache
+
+    cache = active_cache()
+    if cache is not None:
+        ent = cache.lookup(family, shape, jnp.dtype(dtype).name)
+        if ent is not None:
+            _TILE_SOURCES["calibrated"] += 1
+            return int(ent["block_fwd"]), int(ent["block_bwd"]), "calibrated"
+    _TILE_SOURCES["heuristic"] += 1
+    return heuristic(), None, "heuristic"
+
+
+def tile_resolution_stats() -> dict:
+    """Where this process's kernel tiles came from: per-source counts
+    plus the active calibration cache's path and hit/miss/stale
+    counters (None when no cache is active).  Surfaced by
+    ``OperatorEngine.stats()`` and the dry-run roofline report."""
+    from repro.tune.cache import active_cache
+
+    cache = active_cache()
+    out = {
+        "sources": dict(_TILE_SOURCES),
+        "calibration_state": cache.path if cache is not None else None,
+        "cache": dict(cache.counters) if cache is not None else None,
+    }
+    return out
 
 
 def _tap_contract(policy, x) -> None:
@@ -82,14 +142,25 @@ def _to_pair(x, half) -> ComplexPair:
 
 def spectral_contract(
     x, w, *, policy=FULL, block_m: Optional[int] = None,
+    block_m_bwd: Optional[int] = None, fuse_casts: Optional[bool] = None,
     site: str = "model/spectral/contract",
 ):
     """Dense spectral contraction ``bi<modes>,io<modes>->bo<modes>``.
 
-    ``block_m=None`` (the production default) resolves the mode tile via
+    ``block_m=None`` (the production default) resolves the mode tile from
+    the active calibration cache when one holds a validated entry for
+    this (family, shape, dtype, backend, kernel-version) key, else via
     ``pick_block_m`` from the actual shapes and storage itemsize — the
     same estimate the dry-runs record, so their ``fits_vmem`` verdict
-    describes the tiling that really executes.
+    describes the tiling that really executes.  ``block_m_bwd`` tiles the
+    two backward kernels independently (default: the forward tile, or
+    the calibrated backward tile when one resolved).
+
+    ``fuse_casts``: tri-state (see ``resolve_fuse_casts``).  When it
+    resolves on — and the site quantises and ``x``/``w`` arrive as
+    complex — the half storage rounding runs inside the kernel's tile
+    prologue (``cast_to``), so the half operand copies never round-trip
+    through HBM; numerically it is the same Thm 3.2 rounding.
 
     ``x``: complex64 or ComplexPair, shape (B, I, *modes);
     ``w``: complex64 or ComplexPair (the layer's dense corner weight),
@@ -122,8 +193,21 @@ def spectral_contract(
     half = policy.spectral_dtype or jnp.float32
     was_pair = isinstance(x, ComplexPair)
     _tap_contract(policy, x)
-    xp = _to_pair(x, half)
-    wp = _to_pair(w, half)
+    fused = (
+        policy.spectral_is_half
+        and not was_pair
+        and not isinstance(w, ComplexPair)
+        and resolve_fuse_casts(fuse_casts)
+    )
+    if fused:
+        # fused-quantise path: split to f32 pairs without rounding here;
+        # the kernel prologue rounds each tile onto the half grid in
+        # VMEM (same representation error, one fewer HBM round-trip).
+        xp = ComplexPair.from_complex(x, jnp.float32)
+        wp = ComplexPair.from_complex(w, jnp.float32)
+    else:
+        xp = _to_pair(x, half)
+        wp = _to_pair(w, half)
 
     B, I, *modes = xp.re.shape
     I2, O, *modes2 = wp.re.shape
@@ -135,9 +219,15 @@ def spectral_contract(
     M = 1
     for m in modes:
         M *= m
+    # the fused path streams f32 operand tiles, so its VMEM working set
+    # (and its calibration entries) price at itemsize 4
+    itemsize = 4 if fused else jnp.dtype(half).itemsize
     if block_m is None:
-        block_m = pick_block_m(B, I, O, M,
-                               itemsize=jnp.dtype(half).itemsize)
+        block_m, tuned_bwd, _src = _resolve_blocks(
+            "dense-fused" if fused else "dense", (B, I, O, M), half,
+            lambda: pick_block_m(B, I, O, M, itemsize=itemsize),
+        )
+        block_m_bwd = block_m_bwd or tuned_bwd
 
     # named_scope: eqns traced under this site carry its address in
     # their name stack — repro.analyze attributes findings with it
@@ -145,7 +235,9 @@ def spectral_contract(
         out_re, out_im = spectral_contract_pallas(
             xp.re.reshape(B, I, M), xp.im.reshape(B, I, M),
             wp.re.reshape(I, O, M), wp.im.reshape(I, O, M),
-            block_m=block_m, interpret=_use_interpret(), out_dtype=half,
+            block_m=block_m, block_m_bwd=block_m_bwd,
+            interpret=_use_interpret(), out_dtype=half,
+            cast_to=half if fused else None,
         )
     pair = ComplexPair(
         out_re.reshape(B, O, *modes), out_im.reshape(B, O, *modes)
@@ -169,7 +261,8 @@ def cp_mode_factor(lam, mode_factors: Sequence) -> jnp.ndarray:
 
 def spectral_contract_cp(
     x, lam, ui, uo, mode_factors: Sequence, *, policy=FULL,
-    block_m: Optional[int] = None, site: str = "model/spectral/contract",
+    block_m: Optional[int] = None, block_m_bwd: Optional[int] = None,
+    site: str = "model/spectral/contract",
 ):
     """CP-factorised spectral contraction (TFNO §4.6) on the Pallas path.
 
@@ -198,15 +291,21 @@ def spectral_contract_cp(
     uop = _to_pair(uo, half)
     wp = _to_pair(w, half)
     O = uop.re.shape[0]
+    R = uip.re.shape[1]
     if block_m is None:
-        block_m = pick_block_m(B, I, O, M, rank=uip.re.shape[1],
-                               itemsize=jnp.dtype(half).itemsize)
+        block_m, tuned_bwd, _src = _resolve_blocks(
+            "cp", (B, I, O, R, M), half,
+            lambda: pick_block_m(B, I, O, M, rank=R,
+                                 itemsize=jnp.dtype(half).itemsize),
+        )
+        block_m_bwd = block_m_bwd or tuned_bwd
 
     with jax.named_scope(policy.site):
         out_re, out_im = spectral_contract_cp_pallas(
             xp.re.reshape(B, I, M), xp.im.reshape(B, I, M),
             uip.re, uip.im, uop.re, uop.im, wp.re, wp.im,
-            block_m=block_m, interpret=_use_interpret(), out_dtype=half,
+            block_m=block_m, block_m_bwd=block_m_bwd,
+            interpret=_use_interpret(), out_dtype=half,
         )
     pair = ComplexPair(
         out_re.reshape(B, O, *modes), out_im.reshape(B, O, *modes)
@@ -218,6 +317,7 @@ def spectral_contract_cp(
 
 def spectral_contract_lshared(
     x, w, *, policy=FULL, block_l: Optional[int] = None,
+    block_l_bwd: Optional[int] = None,
     site: str = "model/spectral/contract",
 ):
     """Order-shared spherical contraction ``bilm,iol->bolm`` (SFNO).
@@ -243,12 +343,17 @@ def spectral_contract_lshared(
     B, I, L, Mm = xp.re.shape
     O = wp.re.shape[1]
     if block_l is None:
-        block_l = pick_block_l(B, I, O, L, Mm,
-                               itemsize=jnp.dtype(half).itemsize)
+        block_l, tuned_bwd, _src = _resolve_blocks(
+            "lshared", (B, I, O, L, Mm), half,
+            lambda: pick_block_l(B, I, O, L, Mm,
+                                 itemsize=jnp.dtype(half).itemsize),
+        )
+        block_l_bwd = block_l_bwd or tuned_bwd
     with jax.named_scope(policy.site):
         out_re, out_im = spectral_contract_lshared_pallas(
             xp.re, xp.im, wp.re, wp.im,
-            block_l=block_l, interpret=_use_interpret(), out_dtype=half,
+            block_l=block_l, block_l_bwd=block_l_bwd,
+            interpret=_use_interpret(), out_dtype=half,
         )
     pair = ComplexPair(out_re, out_im)
     if was_pair and policy.spectral_is_half:
@@ -281,6 +386,7 @@ def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
 __all__ = [
     "spectral_contract", "spectral_contract_cp", "spectral_contract_lshared",
     "cp_mode_factor", "flash_attention", "rmsnorm", "resolve_use_pallas",
+    "resolve_fuse_casts", "tile_resolution_stats",
     "vmem_bytes", "vmem_bytes_bwd", "cp_vmem_bytes", "lshared_vmem_bytes",
     "pick_block_m", "pick_block_l",
 ]

@@ -62,6 +62,13 @@ from jax.experimental import pallas as pl
 #: VMEM per TPU core (v5e-class) — the budget ``pick_block_m`` packs under.
 VMEM_BUDGET = 16 * 2 ** 20
 
+#: Version of the kernel *schedules* in this module (tile layouts, matmul
+#: decomposition, accumulation discipline).  Bump whenever a change could
+#: shift the perf landscape — every ``repro.tune`` calibration entry is
+#: keyed by this value, so a bump invalidates stale tuning results
+#: without anyone having to remember to delete the cache file.
+KERNEL_VERSION = 2
+
 
 def _acc_dtype(dtype) -> jnp.dtype:
     """Accumulator dtype: f32 everywhere except under an x64 gradcheck."""
@@ -80,14 +87,30 @@ def _pad_modes(a: jnp.ndarray, block_m: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _dense_fwd_kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
+def _cast_tiles(cast_to, *tiles):
+    """Fused storage-cast prologue: round freshly-loaded f32 tiles onto
+    the site's half storage grid *in VMEM*, so the half copy of the
+    operands never round-trips through HBM.  ``astype`` here performs
+    exactly the rounding ``ComplexPair.from_complex`` would have done on
+    the unfused path — the Thm 3.2 representation error is identical,
+    only the HBM traffic changes."""
+    if cast_to is None:
+        return tiles
+    return tuple(t.astype(cast_to) for t in tiles)
+
+
+def _dense_fwd_kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref,
+                      *, cast_to=None):
     """One mode-tile step: batched (over modes) complex matmul.
 
     Refs (VMEM tiles):
       xr/xi: (B, I, TM)   wr/wi: (I, O, TM)   or/oi: (B, O, TM)
+    ``cast_to``: fused-quantise mode — refs hold f32 and the storage
+    rounding happens in the tile prologue (see ``_cast_tiles``).
     """
     xr, xi = xr_ref[...], xi_ref[...]
     wr, wi = wr_ref[...], wi_ref[...]
+    xr, xi, wr, wi = _cast_tiles(cast_to, xr, xi, wr, wi)
     acc = _acc_dtype(xr.dtype)
 
     def bmm(a, b):
@@ -108,7 +131,8 @@ def _dense_fwd_kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
     oi_ref[...] = jnp.transpose(ri + ir, (1, 2, 0)).astype(oi_ref.dtype)
 
 
-def _dense_bwd_x_kernel(gr_ref, gi_ref, wr_ref, wi_ref, dxr_ref, dxi_ref):
+def _dense_bwd_x_kernel(gr_ref, gi_ref, wr_ref, wi_ref, dxr_ref, dxi_ref,
+                        *, cast_to=None):
     """dx = g · conj(w): contract O per mode tile.
 
     Refs: gr/gi (B, O, TM), wr/wi (I, O, TM) -> dxr/dxi (B, I, TM).
@@ -116,6 +140,7 @@ def _dense_bwd_x_kernel(gr_ref, gi_ref, wr_ref, wi_ref, dxr_ref, dxi_ref):
     """
     gr, gi = gr_ref[...], gi_ref[...]
     wr, wi = wr_ref[...], wi_ref[...]
+    gr, gi, wr, wi = _cast_tiles(cast_to, gr, gi, wr, wi)
     acc = _acc_dtype(gr.dtype)
 
     def bmm(a, b):
@@ -130,7 +155,8 @@ def _dense_bwd_x_kernel(gr_ref, gi_ref, wr_ref, wi_ref, dxr_ref, dxi_ref):
     dxi_ref[...] = jnp.transpose(dxi, (1, 2, 0)).astype(dxi_ref.dtype)
 
 
-def _dense_bwd_w_kernel(xr_ref, xi_ref, gr_ref, gi_ref, dwr_ref, dwi_ref):
+def _dense_bwd_w_kernel(xr_ref, xi_ref, gr_ref, gi_ref, dwr_ref, dwi_ref,
+                        *, cast_to=None):
     """dw = conj(x) · g: contract B per mode tile.
 
     Refs: xr/xi (B, I, TM), gr/gi (B, O, TM) -> dwr/dwi (I, O, TM).
@@ -138,6 +164,7 @@ def _dense_bwd_w_kernel(xr_ref, xi_ref, gr_ref, gi_ref, dwr_ref, dwi_ref):
     """
     xr, xi = xr_ref[...], xi_ref[...]
     gr, gi = gr_ref[...], gi_ref[...]
+    xr, xi, gr, gi = _cast_tiles(cast_to, xr, xi, gr, gi)
     acc = _acc_dtype(xr.dtype)
 
     def bmm(a, b):
@@ -168,13 +195,13 @@ def _x_spec(B, I, block_m):
 
 
 def _dense_fwd_call(config, xr, xi, wr, wi):
-    block_m, interpret, out_dtype = config
+    block_m, _block_m_bwd, interpret, out_dtype, cast_to = config
     B, I, M = xr.shape
     _, O, _ = wr.shape
     xr, xi, wr, wi = (_pad_modes(a, block_m) for a in (xr, xi, wr, wi))
     Mp = xr.shape[-1]
     out_re, out_im = _dense_call(
-        _dense_fwd_kernel,
+        functools.partial(_dense_fwd_kernel, cast_to=cast_to),
         [_x_spec(B, I, block_m)] * 2 + [_x_spec(I, O, block_m)] * 2,
         [_x_spec(B, O, block_m)] * 2,
         [jax.ShapeDtypeStruct((B, O, Mp), out_dtype)] * 2,
@@ -197,7 +224,7 @@ def _dense_op_fwd(config, xr, xi, wr, wi):
 def _dense_op_bwd(config, res, cts):
     xr, xi, wr, wi = res
     gr, gi = cts
-    block_m, interpret, _ = config
+    _block_m, block_m, interpret, _, cast_to = config
     B, I, M = xr.shape
     _, O, _ = wr.shape
     grp, gip = _pad_modes(gr, block_m), _pad_modes(gi, block_m)
@@ -206,14 +233,14 @@ def _dense_op_bwd(config, res, cts):
     Mp = grp.shape[-1]
     grid = (Mp // block_m,)
     dxr, dxi = _dense_call(
-        _dense_bwd_x_kernel,
+        functools.partial(_dense_bwd_x_kernel, cast_to=cast_to),
         [_x_spec(B, O, block_m)] * 2 + [_x_spec(I, O, block_m)] * 2,
         [_x_spec(B, I, block_m)] * 2,
         [jax.ShapeDtypeStruct((B, I, Mp), xr.dtype)] * 2,
         grid, interpret, grp, gip, wrp, wip,
     )
     dwr, dwi = _dense_call(
-        _dense_bwd_w_kernel,
+        functools.partial(_dense_bwd_w_kernel, cast_to=cast_to),
         [_x_spec(B, I, block_m)] * 2 + [_x_spec(B, O, block_m)] * 2,
         [_x_spec(I, O, block_m)] * 2,
         [jax.ShapeDtypeStruct((I, O, Mp), wr.dtype)] * 2,
@@ -226,7 +253,10 @@ _dense_op.defvjp(_dense_op_fwd, _dense_op_bwd)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=(
+        "block_m", "block_m_bwd", "interpret", "out_dtype", "cast_to"
+    ),
 )
 def spectral_contract_pallas(
     xr: jnp.ndarray,
@@ -235,8 +265,10 @@ def spectral_contract_pallas(
     wi: jnp.ndarray,
     *,
     block_m: int = 64,
+    block_m_bwd: int | None = None,
     interpret: bool = True,
     out_dtype=None,
+    cast_to=None,
 ) -> tuple:
     """Split-real complex contraction ``bim,iom->bom`` (differentiable).
 
@@ -244,8 +276,15 @@ def spectral_contract_pallas(
       xr/xi: (B, I, M) half (or f32) real/imag parts of the spectrum tile.
       wr/wi: (I, O, M) spectral weights.
       block_m: mode-tile size (VMEM working set scales linearly in it).
+      block_m_bwd: mode-tile size for the two backward kernels (defaults
+        to ``block_m``; the autotuner calibrates the directions
+        independently because their working sets differ).
       interpret: run the kernel body in Python (CPU validation); on TPU
         pass False to compile to Mosaic.
+      cast_to: fused-quantise mode — pass the half storage dtype and feed
+        f32 operands; each tile is rounded onto the storage grid in VMEM
+        (same Thm 3.2 representation error as pre-casting in HBM, one
+        fewer HBM round-trip).
 
     Returns (out_re, out_im): (B, O, M) at ``out_dtype`` (default: x dtype).
     Reverse-mode differentiation runs the two backward Pallas kernels
@@ -259,7 +298,9 @@ def spectral_contract_pallas(
             f"expected (B, I, M) and (I, O, M) with matching I and M"
         )
     out_dtype = jnp.dtype(out_dtype or xr.dtype)
-    return _dense_op((block_m, interpret, out_dtype), xr, xi, wr, wi)
+    cast_to = jnp.dtype(cast_to) if cast_to is not None else None
+    config = (block_m, block_m_bwd or block_m, interpret, out_dtype, cast_to)
+    return _dense_op(config, xr, xi, wr, wi)
 
 
 # ---------------------------------------------------------------------------
@@ -377,7 +418,7 @@ def _cp_specs(B, I, O, R, block_m):
 
 
 def _cp_fwd_call(config, xr, xi, uir, uii, uor, uoi, wr, wi):
-    block_m, interpret, out_dtype = config
+    block_m, _block_m_bwd, interpret, out_dtype = config
     B, I, M = xr.shape
     O, R = uor.shape
     xr, xi, wr, wi = (_pad_modes(a, block_m) for a in (xr, xi, wr, wi))
@@ -407,7 +448,7 @@ def _cp_op_fwd(config, xr, xi, uir, uii, uor, uoi, wr, wi):
 def _cp_op_bwd(config, res, cts):
     xr, xi, uir, uii, uor, uoi, wr, wi = res
     gr, gi = cts
-    block_m, interpret, _ = config
+    _block_m, block_m, interpret, _ = config
     B, I, M = xr.shape
     O, R = uor.shape
     acc = _acc_dtype(xr.dtype)
@@ -444,7 +485,8 @@ _cp_op.defvjp(_cp_op_fwd, _cp_op_bwd)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("block_m", "block_m_bwd", "interpret", "out_dtype"),
 )
 def spectral_contract_cp_pallas(
     xr: jnp.ndarray,
@@ -457,6 +499,7 @@ def spectral_contract_cp_pallas(
     wi: jnp.ndarray,
     *,
     block_m: int = 64,
+    block_m_bwd: int | None = None,
     interpret: bool = True,
     out_dtype=None,
 ) -> tuple:
@@ -481,8 +524,8 @@ def spectral_contract_cp_pallas(
             f"x {xr.shape}, Ui {uir.shape}, Uo {uor.shape}, W {wr.shape}"
         )
     out_dtype = jnp.dtype(out_dtype or xr.dtype)
-    return _cp_op((block_m, interpret, out_dtype), xr, xi, uir, uii,
-                  uor, uoi, wr, wi)
+    config = (block_m, block_m_bwd or block_m, interpret, out_dtype)
+    return _cp_op(config, xr, xi, uir, uii, uor, uoi, wr, wi)
 
 
 # ---------------------------------------------------------------------------
@@ -569,7 +612,7 @@ def _lshared_specs(B, I, O, Mm, block_l):
 
 
 def _lshared_fwd_call(config, xr, xi, wr, wi):
-    block_l, interpret, out_dtype = config
+    block_l, _block_l_bwd, interpret, out_dtype = config
     B, I, L, Mm = xr.shape
     _, O, _ = wr.shape
     xr, xi = _pad_l(xr, block_l, 2), _pad_l(xi, block_l, 2)
@@ -599,7 +642,7 @@ def _lshared_op_fwd(config, xr, xi, wr, wi):
 def _lshared_op_bwd(config, res, cts):
     xr, xi, wr, wi = res
     gr, gi = cts
-    block_l, interpret, _ = config
+    _block_l, block_l, interpret, _ = config
     B, I, L, Mm = xr.shape
     _, O, _ = wr.shape
     xrp, xip = _pad_l(xr, block_l, 2), _pad_l(xi, block_l, 2)
@@ -631,7 +674,8 @@ _lshared_op.defvjp(_lshared_op_fwd, _lshared_op_bwd)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_l", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("block_l", "block_l_bwd", "interpret", "out_dtype"),
 )
 def spectral_contract_lshared_pallas(
     xr: jnp.ndarray,
@@ -640,6 +684,7 @@ def spectral_contract_lshared_pallas(
     wi: jnp.ndarray,
     *,
     block_l: int = 8,
+    block_l_bwd: int | None = None,
     interpret: bool = True,
     out_dtype=None,
 ) -> tuple:
@@ -657,7 +702,8 @@ def spectral_contract_lshared_pallas(
             f"{wr.shape} — expected (B, I, L, M) and (I, O, L)"
         )
     out_dtype = jnp.dtype(out_dtype or xr.dtype)
-    return _lshared_op((block_l, interpret, out_dtype), xr, xi, wr, wi)
+    config = (block_l, block_l_bwd or block_l, interpret, out_dtype)
+    return _lshared_op(config, xr, xi, wr, wi)
 
 
 # ---------------------------------------------------------------------------

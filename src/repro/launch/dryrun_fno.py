@@ -120,9 +120,11 @@ def run_fno_cell(name: str, multi_pod: bool, policy_name: str,
         rank = cp_rank(h, h, cfg.rank)
     kmodes = cfg.modes if spec["kind"] == "fno" else (cfg.lmax, cfg.mmax)
     itemsize = 2 if policy.spectral_is_half else 4
+    kdtype = (jnp.dtype(policy.spectral_dtype).name
+              if policy.spectral_is_half else "float32")
     rec["spectral_kernel"] = spectral_kernel_vmem(
         max(1, B // n_dev), h, h, kmodes, rank=rank,
-        l_shared=spec["kind"] == "sfno", itemsize=itemsize)
+        l_shared=spec["kind"] == "sfno", itemsize=itemsize, dtype=kdtype)
     rec.update({
         "status": "ok",
         "compile_s": round(time.time() - t0, 1),

@@ -93,14 +93,17 @@ def model_flops(n_params_active: float, tokens: float) -> float:
 
 def spectral_kernel_vmem(B: int, I: int, O: int, modes, *, rank: int = 0,
                          l_shared: bool = False,
-                         itemsize: int = 2) -> dict:
+                         itemsize: int = 2, dtype: str = None) -> dict:
     """Tiling record for the Pallas spectral-contraction kernel at one
     dry-run cell: the budget-chosen tile and the fwd/bwd VMEM working
     sets it implies — dense when ``rank == 0``, CP otherwise, or the
     SFNO l-shared kernel when ``l_shared`` (then ``modes = (lmax, mmax)``
     and the tile runs over degrees).  The wrappers resolve the same
     ``pick_block_*`` choice at run time, so this record describes the
-    tiling that actually executes.  Dry-runs attach it next to the
+    tiling that actually executes.  When ``dtype`` is given and an
+    active calibration state (``repro.tune``) holds a validated entry
+    for the cell, the tuned fwd/bwd tiles replace the heuristic and the
+    record says so via ``tile_source``.  Dry-runs attach it next to the
     roofline so a cell that would spill VMEM is visible without
     compiling for real hardware."""
     from repro.kernels.ops import (
@@ -108,29 +111,57 @@ def spectral_kernel_vmem(B: int, I: int, O: int, modes, *, rank: int = 0,
         vmem_bytes, vmem_bytes_bwd)
     from repro.kernels.spectral_contract import VMEM_BUDGET
 
+    def _calibrated(family, shape):
+        if dtype is None:
+            return None
+        from repro.tune.cache import active_cache
+
+        cache = active_cache()
+        if cache is None:
+            return None
+        ent = cache.lookup(family, shape, dtype)
+        if ent is None:
+            return None
+        return int(ent["block_fwd"]), int(ent["block_bwd"])
+
     if l_shared:
         L, Mm = (int(m) for m in modes)
-        bl = pick_block_l(B, I, O, L, Mm, itemsize=itemsize)
-        fwd = bwd = lshared_vmem_bytes(B, I, O, Mm, bl, itemsize)
-        tile, n_tiled, kind = bl, L, "l_shared"
+        tuned = _calibrated("lshared", (B, I, O, L, Mm))
+        if tuned:
+            bl, bl_bwd = tuned
+        else:
+            bl = bl_bwd = pick_block_l(B, I, O, L, Mm, itemsize=itemsize)
+        fwd = lshared_vmem_bytes(B, I, O, Mm, bl, itemsize)
+        bwd = lshared_vmem_bytes(B, I, O, Mm, bl_bwd, itemsize)
+        tile, tile_bwd, n_tiled, kind = bl, bl_bwd, L, "l_shared"
     else:
         M = 1
         for m in modes:
             M *= int(m)
-        tile = pick_block_m(B, I, O, M, rank=rank, itemsize=itemsize)
+        shape = (B, I, O, rank, M) if rank else (B, I, O, M)
+        tuned = _calibrated("cp" if rank else "dense", shape)
+        if tuned:
+            tile, tile_bwd = tuned
+        else:
+            tile = tile_bwd = pick_block_m(B, I, O, M, rank=rank,
+                                           itemsize=itemsize)
         if rank:
-            fwd = bwd = cp_vmem_bytes(B, I, O, rank, tile, itemsize)
+            fwd = cp_vmem_bytes(B, I, O, rank, tile, itemsize)
+            bwd = cp_vmem_bytes(B, I, O, rank, tile_bwd, itemsize)
         else:
             fwd = vmem_bytes(B, I, O, tile, itemsize)
-            bwd = vmem_bytes_bwd(B, I, O, tile, itemsize)
+            bwd = vmem_bytes_bwd(B, I, O, tile_bwd, itemsize)
         n_tiled, kind = M, ("cp" if rank else "dense")
     return {
         "kind": kind,
         "block": tile,
+        "block_bwd": tile_bwd,
         "tiled_extent": n_tiled,
         "grid_steps": -(-n_tiled // tile),
         "rank": rank,
         "itemsize": itemsize,
+        "dtype": dtype,
+        "tile_source": "calibrated" if tuned else "heuristic",
         "vmem_fwd_bytes": fwd,
         "vmem_bwd_bytes": bwd,
         "fits_vmem": max(fwd, bwd) <= VMEM_BUDGET,

@@ -79,9 +79,19 @@ class OperatorEngine(EngineBase):
         autoprec_every: int = 4,
         use_pallas: Optional[bool] = None,
         memo_window: int = 0,
+        calibration_state: Optional[str] = None,
     ):
         if model not in ("fno", "sfno"):
             raise ValueError(f"model must be 'fno' or 'sfno', got {model!r}")
+        # tuned spectral tiles: an explicit state path beats the
+        # $REPRO_CALIBRATION_STATE env default; either way kernel tile
+        # resolution (repro.kernels.ops) consults the calibration cache
+        # and falls back to the static heuristic per miss
+        self.calibration_state = calibration_state
+        if calibration_state is not None:
+            from repro.tune.cache import activate
+
+            activate(calibration_state)
         super().__init__(
             Scheduler(
                 scheduler,
@@ -302,4 +312,7 @@ class OperatorEngine(EngineBase):
             out["numerics"] = self._telem.counters()
         if self.controller is not None:
             out["autoprec"] = self.controller.describe()
+        from repro.kernels.ops import tile_resolution_stats
+
+        out["tiles"] = tile_resolution_stats()
         return out

@@ -69,6 +69,12 @@ class TrainerConfig:
     #: model-agnostic loss closures that bake the flag into their config
     #: simply ignore it.
     use_pallas: Optional[bool] = None
+    #: Calibration-state JSON (``repro.tune``): activated at Trainer
+    #: construction so spectral tile resolution serves validated tuned
+    #: tiles instead of the static heuristic.  None = keep whatever is
+    #: already active (explicit ``activate()`` or
+    #: ``$REPRO_CALIBRATION_STATE``).
+    calibration_state: Optional[str] = None
 
 
 class Trainer:
@@ -108,6 +114,10 @@ class Trainer:
         from repro.kernels.ops import resolve_use_pallas
 
         self._use_pallas = resolve_use_pallas(config.use_pallas)
+        if config.calibration_state is not None:
+            from repro.tune.cache import activate
+
+            activate(config.calibration_state)
         import inspect
 
         params_sig = inspect.signature(loss_fn).parameters

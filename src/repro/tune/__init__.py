@@ -1,0 +1,36 @@
+"""repro.tune — on-hardware kernel autotuner with a persistent,
+oracle-validated calibration cache.
+
+The pieces:
+
+  space    legal tile candidates per kernel family, enumerated from the
+           same ``*vmem_bytes*`` estimators the static heuristics use
+  measure  median-of-k train-step walls on the real backend (interpret
+           fallback for CI), achieved GB/s + roofline fraction
+  oracle   the admission gate: every candidate vs its einsum reference
+           under the Thm 3.2 ``stages·4εM + c·ε_f32·M`` budget
+  cache    versioned JSON keyed by (family, shape, dtype, backend,
+           kernel_version); atomic writes, stale/corrupt detection,
+           graceful fallback to the heuristic
+
+``python -m repro.tune {tune,validate,report}`` drives the loop;
+``cache.activate(path)`` or ``$REPRO_CALIBRATION_STATE`` makes the
+winners reach ``repro.kernels.ops`` tile resolution everywhere.
+"""
+from .cache import (  # noqa: F401
+    CalibrationCache,
+    CalibrationError,
+    activate,
+    active_cache,
+    entry_key,
+    load,
+    safe_load,
+    save,
+)
+from .space import Candidate, candidates, legal_blocks, tile_vmem_bytes  # noqa: F401
+
+__all__ = [
+    "CalibrationCache", "CalibrationError", "activate", "active_cache",
+    "entry_key", "load", "safe_load", "save",
+    "Candidate", "candidates", "legal_blocks", "tile_vmem_bytes",
+]

@@ -433,3 +433,106 @@ class TestGradients:
                                            err_msg=f"arg {k}")
         finally:
             jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Fused quantize prologue (cast_to)
+# ---------------------------------------------------------------------------
+
+#: policies whose contract site stores at a half format — only these can
+#: take the fused path (full-precision sites have nothing to round)
+HALF_POLICY_NAMES = [
+    n for n in POLICY_NAMES
+    if get_policy(n).at("fno/layer0/spectral/contract").spectral_is_half
+]
+
+
+class TestFusedCastPrologue:
+    """The in-kernel quantize fusion must be numerically *invisible*:
+    same storage grid, same rounding, one fewer HBM round-trip."""
+
+    def _xw(self, seed=17, B=2, I=3, O=4, modes=(3, 5)):
+        rng = np.random.RandomState(seed)
+        return _randc(rng, (B, I, *modes)), _randc(rng, (I, O, *modes))
+
+    @pytest.mark.parametrize("policy_name", HALF_POLICY_NAMES)
+    def test_forward_bit_identical_to_unfused(self, policy_name):
+        """In-VMEM ``astype(half)`` is the same rounding as the HBM
+        ``ComplexPair.from_complex`` pass it replaces — the fused forward
+        is bitwise equal, not merely within budget."""
+        site = get_policy(policy_name).at("fno/layer0/spectral/contract")
+        x, w = self._xw()
+        y_f = ops.spectral_contract(x, w, policy=site, block_m=4,
+                                    fuse_casts=True)
+        y_u = ops.spectral_contract(x, w, policy=site, block_m=4,
+                                    fuse_casts=False)
+        assert jnp.array_equal(jnp.asarray(y_f), jnp.asarray(y_u)), (
+            policy_name)
+
+    @pytest.mark.parametrize("policy_name", HALF_POLICY_NAMES)
+    def test_fused_within_budget_vs_einsum(self, policy_name):
+        site = get_policy(policy_name).at("fno/layer0/spectral/contract")
+        x, w = self._xw(seed=18)
+        y_e = site.contract(_dense_expr(2), x, w)
+        y_p = ops.spectral_contract(x, w, policy=site, block_m=4,
+                                    fuse_casts=True)
+        mag = np.einsum("bixy,ioxy->boxy", np.abs(x), np.abs(w))
+        _assert_within_budget(y_p, y_e, site.eps, mag, stages=2,
+                              label=f"dense-fused {policy_name}")
+
+    @pytest.mark.parametrize("policy_name", HALF_POLICY_NAMES)
+    def test_grads_match_unfused(self, policy_name):
+        """The fused backward writes dx/dw at f32 (the residuals'
+        dtype); the unfused one rounds them to half — they may differ
+        only by that final storage rounding."""
+        site = get_policy(policy_name).at("fno/layer0/spectral/contract")
+        x, w = self._xw(seed=19)
+
+        def loss(x, w, fuse):
+            y = ops.spectral_contract(x, w, policy=site, block_m=4,
+                                      fuse_casts=fuse)
+            return jnp.sum(jnp.abs(jnp.asarray(y)) ** 2)
+
+        l_f, g_f = jax.value_and_grad(loss, argnums=(0, 1))(x, w, True)
+        l_u, g_u = jax.value_and_grad(loss, argnums=(0, 1))(x, w, False)
+        np.testing.assert_allclose(float(l_f), float(l_u), rtol=1e-6)
+        tol = max(8 * site.eps, 1e-4)
+        for a, b in zip(g_f, g_u, strict=True):
+            assert _rel_err(a, b) <= tol, policy_name
+
+    def test_full_precision_site_never_fuses(self):
+        """No quantize rule means nothing to fuse: both flags produce
+        the identical f32 path."""
+        x, w = self._xw(seed=20)
+        y_t = ops.spectral_contract(x, w, policy=FULL, block_m=4,
+                                    fuse_casts=True)
+        y_f = ops.spectral_contract(x, w, policy=FULL, block_m=4,
+                                    fuse_casts=False)
+        assert jnp.array_equal(y_t, y_f)
+
+    def test_pair_inputs_skip_fusion(self):
+        """Operands already rounded to half pairs have no cast to fuse;
+        the flag must be a no-op on them."""
+        site = get_policy("mixed_fno_bf16").at("fno/layer0/spectral/contract")
+        x, w = self._xw(seed=21)
+        xp = ComplexPair.from_complex(x, site.spectral_dtype)
+        wp = ComplexPair.from_complex(w, site.spectral_dtype)
+        y_t = ops.spectral_contract(xp, wp, policy=site, block_m=4,
+                                    fuse_casts=True)
+        y_f = ops.spectral_contract(xp, wp, policy=site, block_m=4,
+                                    fuse_casts=False)
+        assert jnp.array_equal(y_t.re, y_f.re)
+        assert jnp.array_equal(y_t.im, y_f.im)
+
+    def test_resolve_fuse_casts_env_and_flag(self, monkeypatch):
+        from repro.kernels.ops import resolve_fuse_casts
+
+        assert resolve_fuse_casts(True) is True
+        assert resolve_fuse_casts(False) is False
+        monkeypatch.setenv("REPRO_FUSE_CASTS", "0")
+        assert resolve_fuse_casts(None) is False
+        assert resolve_fuse_casts(True) is True  # explicit beats env
+        monkeypatch.setenv("REPRO_FUSE_CASTS", "1")
+        assert resolve_fuse_casts(None) is True
+        monkeypatch.delenv("REPRO_FUSE_CASTS")
+        assert resolve_fuse_casts(None) is True  # default ON
