@@ -23,7 +23,6 @@ Results land in ``benchmarks/results/autoprec.json``.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
 import jax
@@ -34,7 +33,7 @@ from repro.core import PrecisionSchedule
 from repro.models import fno_apply
 from repro.train import Trainer, TrainerConfig, relative_l2
 
-from benchmarks.common import darcy_data, small_fno
+from benchmarks.common import darcy_data, small_fno, write_result
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "autoprec.json")
 
@@ -146,9 +145,7 @@ def main():
 
     jax.config.update("jax_platform_name", "cpu")
     report = run(args.steps, args.resolution, args.interval)
-    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
-    with open(RESULTS, "w") as f:
-        json.dump(report, f, indent=1)
+    write_result(RESULTS, report)
 
     print(f"\n== bench_autoprec (steps={args.steps}, "
           f"res={args.resolution}) ==")

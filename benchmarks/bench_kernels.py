@@ -18,14 +18,13 @@ bench-smoke job).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_fn
+from benchmarks.common import time_fn, write_result
 from repro.core import get_policy
 from repro.core.spectral import _cp_exprs, _dense_expr
 from repro.kernels import ops
@@ -133,8 +132,11 @@ def bench_case(name: str, policy_name: str, seed: int = 0,
     legs = [("einsum", einsum_loss), ("pallas", pallas_loss)]
     if tuned_leg:
         # tuned leg: block_m=None routes tile resolution through the
-        # active calibration cache (heuristic fallback per miss)
+        # active calibration cache (heuristic fallback per miss).  Reset
+        # the trace-time tile counters first so row["tiles"] reports
+        # this case's resolutions, not the process's accumulated total.
         legs.append(("pallas_tuned", pallas_loss_at(None)))
+        ops.reset_tile_resolution_stats()
     for label, loss in legs:
         fwd = jax.jit(loss)
         bwd = jax.jit(jax.value_and_grad(loss, argnums=(0,)))
@@ -200,9 +202,7 @@ def main():
 
     report = {"backend": jax.default_backend(),
               "calibration_state": args.calibration_state, "rows": rows}
-    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
-    with open(RESULTS, "w") as f:
-        json.dump(report, f, indent=1)
+    write_result(RESULTS, report)
     print(f"results -> {RESULTS}")
 
 

@@ -14,7 +14,6 @@ recorded speedup is numerics-free.
 """
 from __future__ import annotations
 
-import json
 import os
 
 import jax
@@ -58,9 +57,7 @@ def bench_arch(arch: str) -> dict:
         warm, _ = engine.run_until_done(
             [Request(uid=-1, prompt=[1] * (chunk + 1), max_new_tokens=2)])
         assert all(r.done for r in warm)
-        engine._wall_s = 0.0
-        engine._n_prompt_tokens = engine._n_generated = 0
-        engine._prefill_ticks = engine._decode_ticks = 0
+        engine.reset_counters()
         done, ticks = engine.run_until_done(_requests(cfg.vocab))
         assert len(done) == N_REQUESTS and all(r.done for r in done)
         generations[chunk] = {r.uid: list(r.generated) for r in done}
@@ -91,10 +88,10 @@ def bench_arch(arch: str) -> dict:
 
 
 def main():
+    from benchmarks.common import write_result
+
     recs = [bench_arch(a) for a in ARCHS]
-    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
-    with open(RESULTS, "w") as f:
-        json.dump(recs, f, indent=1)
+    write_result(RESULTS, {"records": recs})
     print("arch,chunk,ticks,wall_s,tokens_per_s")
     for r in recs:
         for chunk, row in r["by_chunk"].items():

@@ -190,9 +190,9 @@ def main(argv=None) -> dict:
             "prefix_hit_rate": paged_row["prefix"]["hit_rate"],
         },
     }
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(out, f, indent=2)
+    from benchmarks.common import write_result
+
+    write_result(args.out, out)
     c = out["comparison"]
     print(f"p50 {paged_row['slo']['latency_ms']['p50']}ms  "
           f"p99 {paged_row['slo']['latency_ms']['p99']}ms  "

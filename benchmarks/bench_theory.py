@@ -23,7 +23,6 @@ Results land in ``benchmarks/results/theory_fig7.json``.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
 from repro.autoprec.certify import theory_rows
@@ -73,9 +72,9 @@ def main():
         "disc_shrinks_with_n": disc_monotone,
         "crossover_mesh_size_fp16": crossover,
     }
-    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
-    with open(RESULTS, "w") as f:
-        json.dump(report, f, indent=1)
+    from benchmarks.common import write_result
+
+    write_result(RESULTS, report)
     print(f"bound violations: {violations}  "
           f"(crossover n* for fp16, d={args.d}: {crossover:.3e})")
     print(f"results -> {RESULTS}")

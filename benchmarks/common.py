@@ -1,4 +1,12 @@
-"""Shared benchmark helpers: timing, memory analysis, tiny-problem setup."""
+"""Shared benchmark helpers: timing, memory analysis, tiny-problem setup.
+
+Every ``benchmarks/results/*.json`` goes through :func:`write_result`
+(re-exported from :mod:`repro.obs.export`, where src-tree writers import
+it from): the payload is written atomically with a shared metadata
+header under ``"meta"`` — schema version, backend, jax version, git sha,
+UTC timestamp, ``REPRO_*`` env — so the perf trajectory is
+machine-comparable across PRs.
+"""
 from __future__ import annotations
 
 import time
@@ -8,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.models import FNOConfig, fno_apply, init_fno
+from repro.obs import result_header, write_result  # noqa: F401
 from repro.train.losses import relative_l2
 
 

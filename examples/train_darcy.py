@@ -36,6 +36,12 @@ def main():
                          "tile resolution serves validated tuned tiles "
                          "instead of the static heuristic (default: "
                          "$REPRO_CALIBRATION_STATE if set)")
+    ap.add_argument("--obs-trace", default=None, metavar="OUT_JSONL",
+                    help="enable repro.obs and write the run timeline + "
+                         "metrics snapshot as JSONL, plus a Perfetto-"
+                         "loadable <stem>.trace.json and a Prometheus "
+                         "<stem>.prom next to it; inspect with "
+                         "`python -m repro.obs summary OUT_JSONL`")
     args = ap.parse_args()
 
     print("generating Darcy data (CG solver)...")
@@ -76,6 +82,7 @@ def main():
             optimizer=AdamW(lr=2e-3, weight_decay=1e-5),
             ckpt_dir=ckpt_dir, ckpt_every=20,
             calibration_state=args.calibration_state,
+            obs=args.obs_trace is not None,
         )
         trainer = Trainer(loss_fn, params, tcfg)
         trainer.install_preemption_handler()
@@ -118,6 +125,26 @@ def main():
                 relative_l2(fno_apply(p_final, a_te, cfg, mixed), u_te))
         print(f"mixed eval rel-L2:                 {e_mixed:.4f}")
         print(f"mixed, last layer full (override): {e_lastfull:.4f}")
+
+    if args.obs_trace:
+        import os
+
+        from repro.obs import (registry, run_records, trace,
+                               write_chrome_trace, write_jsonl,
+                               write_prometheus)
+
+        recs = trace.snapshot()
+        snap = registry().snapshot()
+        write_jsonl(args.obs_trace,
+                    run_records(recs, snapshot=snap,
+                                run="train_darcy", steps=args.steps,
+                                auto_precision=args.auto_precision))
+        stem = os.path.splitext(args.obs_trace)[0]
+        write_chrome_trace(stem + ".trace.json", recs)
+        write_prometheus(stem + ".prom", snap)
+        print(f"obs: {len(recs)} trace records -> {args.obs_trace} "
+              f"(+ {stem}.trace.json, {stem}.prom); "
+              f"render with `python -m repro.obs summary {args.obs_trace}`")
 
 
 if __name__ == "__main__":

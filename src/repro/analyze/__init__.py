@@ -8,7 +8,10 @@ nothing executes:
             round-trip casts, fp32 residues on demoted sites);
   sites     AST scan of site literals + rule-table cross-checks
             (orphans, dead patterns, shadowed entries);
-  kernels   BlockSpec/grid/VMEM checks over the Pallas kernel families.
+  kernels   BlockSpec/grid/VMEM checks over the Pallas kernel families;
+  obs       AST scan for hand-rolled counters in instrumented subtrees
+            that never reference repro.obs (invisible to the registry
+            snapshot / Prometheus scrape).
 
 ``python -m repro.analyze`` runs everything, writes
 ``benchmarks/results/analyze.json`` and exits nonzero on unsuppressed
@@ -38,3 +41,4 @@ from .sites import (  # noqa: F401
     sites_pass,
 )
 from .kernels import kernels_pass, record_pallas_calls  # noqa: F401
+from .obscov import obs_coverage_pass  # noqa: F401

@@ -5,7 +5,6 @@ unsuppressed error-severity finding (the CI merge gate).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 from typing import List
@@ -60,7 +59,8 @@ def main(argv=None) -> int:
     ap.add_argument("--no-trainer", action="store_true",
                     help="skip the full-Trainer-step traces")
     ap.add_argument("--skip", nargs="*", default=[],
-                    choices=("dataflow", "sites", "kernels", "calibration"),
+                    choices=("dataflow", "sites", "kernels", "calibration",
+                             "obs"),
                     help="passes to skip")
     ap.add_argument("--calibration-state", default=None,
                     help="calibration-state JSON to lint for tile "
@@ -99,6 +99,11 @@ def main(argv=None) -> int:
         from .kernels import kernels_pass
 
         findings.extend(kernels_pass())
+    if "obs" not in args.skip:
+        print(f"[analyze] obs: counter-registry coverage scan of {args.src}")
+        from .obscov import obs_coverage_pass
+
+        findings.extend(obs_coverage_pass(args.src))
     if "calibration" not in args.skip:
         cal_path = (args.calibration_state
                     or os.environ.get("REPRO_CALIBRATION_STATE"))
@@ -144,9 +149,9 @@ def main(argv=None) -> int:
         "findings": [f.to_json() for f in active],
         "suppressed": [f.to_json() for f in suppressed],
     }
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
-    with open(args.out, "w") as fh:
-        json.dump(report, fh, indent=2, sort_keys=True)
+    from repro.obs import write_result
+
+    write_result(args.out, report)
     print(f"\nwrote {args.out}")
 
     return 1 if errors else 0

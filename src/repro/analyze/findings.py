@@ -19,7 +19,7 @@ WARNING = "warning"
 SEVERITIES = (ERROR, WARNING)
 
 #: Pass names, in report order.
-PASSES = ("dataflow", "sites", "kernels")
+PASSES = ("dataflow", "sites", "kernels", "obs")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -136,9 +136,15 @@ class _SiteVisitor(ast.NodeVisitor):
             self._add(node.args[0])
         if isinstance(func, ast.Name) and func.id == "tap" and node.args:
             self._add(node.args[0])
-        for kw in node.keywords:
-            if kw.arg == "site":
-                self._add(kw.value)
+        # repro.obs numerics events carry a ``site=`` attribute naming an
+        # *event location* (e.g. "serve/logits"), not a precision-site
+        # address — a different namespace this check must not police.
+        callee = (func.attr if isinstance(func, ast.Attribute)
+                  else func.id if isinstance(func, ast.Name) else None)
+        if callee != "numerics_event":
+            for kw in node.keywords:
+                if kw.arg == "site":
+                    self._add(kw.value)
         self.generic_visit(node)
 
     def _defaults(self, node) -> None:

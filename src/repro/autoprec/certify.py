@@ -23,7 +23,6 @@ CLI (tiny certification pass, used by CI)::
 from __future__ import annotations
 
 import argparse
-import json
 import os
 from typing import List, Optional, Tuple
 
@@ -267,9 +266,9 @@ def theory_rows(seed: int = 0, d: int = 2,
 
 
 def write_report(reports: List[dict], path: str) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump({"reports": reports}, f, indent=1)
+    from repro.obs import write_result
+
+    write_result(path, {"reports": reports})
 
 
 def main(argv: Optional[List[str]] = None) -> int:

@@ -196,6 +196,8 @@ class AutoPrecisionController:
             else:
                 groups[g] = dataclasses.replace(w, hist=w.hist.copy())
 
+        from repro.obs import autoprec_decision, numerics_event
+
         budget = self.eps_budget(grid_points)
         changed = False
         for g, w in sorted(groups.items()):
@@ -207,12 +209,19 @@ class AutoPrecisionController:
             if w.overflow > 0:
                 st.overflow_streak += 1
                 st.clean = 0
+                numerics_event("overflow_streak", site=g,
+                               streak=st.overflow_streak, amax=st.amax,
+                               **({} if step is None else {"step": step}))
                 if (st.overflow_streak >= self.config.promote_streak
                         and st.fmt != "float32"):
+                    old = st.fmt
                     st.fmt = "float32"
                     st.cooldown = self.config.cooldown
                     st.overflow_streak = 0
                     changed = True
+                    autoprec_decision(g, old, "float32",
+                                      eps_budget=budget, amax=st.amax,
+                                      step=step)
                 continue
             st.overflow_streak = 0
             st.clean += 1
@@ -220,9 +229,13 @@ class AutoPrecisionController:
                 continue
             best = self._choose(st, w, budget)
             if best != st.fmt:
+                old = st.fmt
                 st.fmt = best
                 st.cooldown = self.config.cooldown
                 changed = True
+                autoprec_decision(g, old, best, eps_budget=budget,
+                                  amax=st.amax,
+                                  fmt_eps=FORMAT_EPS.get(best), step=step)
         if changed:
             self.version += 1
             self.last_change_update = self.updates

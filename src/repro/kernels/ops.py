@@ -88,6 +88,21 @@ def _site_of(policy, site: str):
 _TILE_SOURCES = {"heuristic": 0, "calibrated": 0}
 
 
+def _obs_kernel_call(family: str, shape: tuple, dtype) -> None:
+    """Per-family traced-call counter + bytes-moved gauge in the obs
+    registry.  Counted where tiles resolve — once per compiled shape,
+    not per executed step (jit caches the wrapper's trace); the gauge
+    carries the tune traffic model's HBM bytes for the last shape this
+    family traced with."""
+    from repro.obs import registry
+    from repro.tune.measure import bytes_moved
+
+    reg = registry()
+    reg.counter("repro_kernels_calls_total", family=family).inc()
+    reg.gauge("repro_kernels_bytes_moved", family=family).set(
+        float(bytes_moved(family, shape, jnp.dtype(dtype).name)))
+
+
 def _resolve_blocks(family: str, shape: tuple, dtype, heuristic):
     """Resolve (block_fwd, block_bwd, source) for one kernel launch.
 
@@ -100,6 +115,7 @@ def _resolve_blocks(family: str, shape: tuple, dtype, heuristic):
     """
     from repro.tune.cache import active_cache
 
+    _obs_kernel_call(family, shape, dtype)
     cache = active_cache()
     if cache is not None:
         ent = cache.lookup(family, shape, jnp.dtype(dtype).name)
@@ -124,6 +140,32 @@ def tile_resolution_stats() -> dict:
         "cache": dict(cache.counters) if cache is not None else None,
     }
     return out
+
+
+def reset_tile_resolution_stats() -> None:
+    """Zero the tile-source counters and the active calibration cache's
+    hit/miss/stale counters (bench hygiene between warmup and
+    measurement legs).  Registered with the obs registry below, so
+    ``repro.obs.registry().reset()`` covers it too."""
+    from repro.tune.cache import active_cache
+
+    for k in _TILE_SOURCES:
+        _TILE_SOURCES[k] = 0
+    cache = active_cache()
+    if cache is not None:
+        for k in cache.counters:
+            cache.counters[k] = 0
+
+
+def _register_obs() -> None:
+    from repro.obs import registry
+
+    registry().register_external(
+        "repro_kernels_tiles", tile_resolution_stats,
+        reset_tile_resolution_stats)
+
+
+_register_obs()
 
 
 def _tap_contract(policy, x) -> None:
@@ -363,6 +405,10 @@ def spectral_contract_lshared(
 
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
     """(B, H, S, D) attention; flattens heads into the grid batch axis."""
+    from repro.obs import registry
+
+    registry().counter("repro_kernels_calls_total",
+                       family="flash_attention").inc()
     B, H, S, D = q.shape
     Sk = k.shape[2]
     qf = q.reshape(B * H, S, D)
@@ -377,6 +423,9 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128):
 
 def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
     """Rank-agnostic RMSNorm over the last axis."""
+    from repro.obs import registry
+
+    registry().counter("repro_kernels_calls_total", family="rmsnorm").inc()
     shape = x.shape
     flat = x.reshape(-1, shape[-1])
     out = _rmsnorm(flat, w, eps=eps, block_rows=block_rows, interpret=_use_interpret())
@@ -387,6 +436,7 @@ __all__ = [
     "spectral_contract", "spectral_contract_cp", "spectral_contract_lshared",
     "cp_mode_factor", "flash_attention", "rmsnorm", "resolve_use_pallas",
     "resolve_fuse_casts", "tile_resolution_stats",
+    "reset_tile_resolution_stats",
     "vmem_bytes", "vmem_bytes_bwd", "cp_vmem_bytes", "lshared_vmem_bytes",
     "pick_block_m", "pick_block_l",
 ]

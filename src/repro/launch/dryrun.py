@@ -200,14 +200,17 @@ def load_results(path=RESULTS):
 
 
 def save_result(rec: dict, path=RESULTS):
-    os.makedirs(os.path.dirname(path), exist_ok=True)
+    from repro.obs import result_header, write_json_atomic
+
     results = load_results(path)
     results = [r for r in results
                if not (r["arch"] == rec["arch"] and r["shape"] == rec["shape"]
                        and r["mesh"] == rec["mesh"] and r.get("policy") == rec.get("policy"))]
+    # the file stays a flat record list (roofline_report iterates it);
+    # the shared metadata header rides on each appended record instead
+    rec = {**rec, "meta": result_header()}
     results.append(rec)
-    with open(path, "w") as f:
-        json.dump(results, f, indent=1)
+    write_json_atomic(path, results)
 
 
 def main():

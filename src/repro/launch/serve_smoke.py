@@ -121,18 +121,42 @@ def main():
     ap.add_argument("--out", default=RESULTS)
     ap.add_argument("--lm-policy", default="full")
     ap.add_argument("--operator-policy", default="mixed_fno_bf16")
+    ap.add_argument("--obs-trace", default=None, metavar="OUT_JSONL",
+                    help="enable repro.obs tracing across the three "
+                         "engine runs and write the timeline + metrics "
+                         "snapshot as JSONL (plus <stem>.trace.json and "
+                         "<stem>.prom)")
     args = ap.parse_args()
+
+    from repro.obs import trace
+
+    if args.obs_trace:
+        trace.enable()
 
     rec = {
         "lm": run_lm_smoke(args.lm_policy),
         "lm_paged": run_paged_lm_smoke(args.lm_policy),
         "operator": run_operator_smoke(args.operator_policy),
     }
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(rec, f, indent=1)
+    from repro.obs import write_result
+
+    write_result(args.out, rec)
     print(json.dumps(rec, indent=1))
     print(f"\nserve smoke ok -> {args.out}")
+
+    if args.obs_trace:
+        from repro.obs import (registry, run_records, write_chrome_trace,
+                               write_jsonl, write_prometheus)
+
+        recs = trace.snapshot()
+        snap = registry().snapshot()
+        write_jsonl(args.obs_trace,
+                    run_records(recs, snapshot=snap, run="serve_smoke"))
+        stem = os.path.splitext(args.obs_trace)[0]
+        write_chrome_trace(stem + ".trace.json", recs)
+        write_prometheus(stem + ".prom", snap)
+        print(f"obs: {len(recs)} trace records -> {args.obs_trace} "
+              f"(+ {stem}.trace.json, {stem}.prom)")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ from repro.core import PrecisionPolicy, FULL
 from repro.configs.base import LMArchConfig
 from repro.dist import use_mesh
 from repro.models.lm import init_cache, lm_decode_step, lm_prefill_chunk
+from repro.obs import trace as obs_trace
 
 from .sampler import GREEDY, SamplingParams, request_key, sample_token
 from .scheduler import Scheduler
@@ -86,6 +87,7 @@ class EngineBase:
         self.scheduler = scheduler
         self.n_slots = n_slots
         self._ticks = 0
+        self._tick0 = 0     # tick count at the last reset_counters()
         self._wall_s = 0.0
         self._occupancy_sum = 0.0
         self._n_done = 0
@@ -102,18 +104,29 @@ class EngineBase:
         ok = self.scheduler.submit(req, self._ticks)
         if not ok:
             self._n_failed += 1
+        elif obs_trace.is_enabled():
+            # request lifecycle: an async track slice per uid, queued at
+            # submit, closed when the request finishes (Perfetto renders
+            # one row per in-flight request)
+            obs_trace.begin("request", getattr(req, "uid", id(req)),
+                            category="request", engine=self.kind)
         return ok
 
     def tick(self) -> List[Any]:
         """One engine step.  Returns the requests finished this tick."""
         t0 = time.perf_counter()
-        finished = self._tick_impl()
+        with obs_trace.span("serve/tick", engine=self.kind, tick=self._ticks):
+            finished = self._tick_impl()
         self._wall_s += time.perf_counter() - t0
         self._ticks += 1
         for r in finished:
             r.finish_tick = self._ticks
             r.status = "done"
             self._n_done += 1
+            if obs_trace.is_enabled():
+                obs_trace.end("request", getattr(r, "uid", id(r)),
+                              category="request",
+                              ticks=self._ticks - getattr(r, "submit_tick", 0))
         return finished
 
     def drain(self, max_ticks: int = 10_000) -> Tuple[List[Any], int]:
@@ -132,8 +145,8 @@ class EngineBase:
         return finished, ticks
 
     def stats(self) -> Dict[str, Any]:
-        denom = max(self._ticks, 1)
-        return {
+        denom = max(self._ticks - self._tick0, 1)
+        out = {
             "engine": self.kind,
             "ticks": self._ticks,
             "wall_s": round(self._wall_s, 6),
@@ -144,9 +157,31 @@ class EngineBase:
             "queue": self.scheduler.stats(),
             **self._extra_stats(),
         }
+        # the dict stays the caller-facing return; the registry snapshot
+        # is the machine-readable export source for the same numbers
+        from repro.obs import registry
+
+        registry().publish(f"serve_{self.kind}", out)
+        return out
 
     def _extra_stats(self) -> Dict[str, Any]:
         return {}
+
+    def reset_counters(self) -> None:
+        """Zero the engine's throughput/occupancy counters (bench hygiene:
+        call between the warmup and measurement legs, with no requests in
+        flight).  The absolute tick count is preserved — scheduler wait
+        accounting is keyed on it — but occupancy averages over ticks
+        since the reset."""
+        self._tick0 = self._ticks
+        self._wall_s = 0.0
+        self._occupancy_sum = 0.0
+        self._n_done = 0
+        self._n_failed = 0
+        self._reset_extra_counters()
+
+    def _reset_extra_counters(self) -> None:
+        pass
 
 
 # ---------------------------------------------------------------------------
@@ -351,7 +386,13 @@ class LMEngine(EngineBase):
         if finite.any():
             self._logits_amax = max(
                 self._logits_amax, float(np.abs(sub[finite]).max()))
-        self._logits_nonfinite += int((~finite).sum())
+        n_bad = int((~finite).sum())
+        if n_bad:
+            from repro.obs import numerics_event
+
+            numerics_event("nonfinite_logits", site="serve/logits",
+                           count=n_bad, tick=self._ticks)
+        self._logits_nonfinite += n_bad
         self._rows_observed += len(rows)
 
     # -- sampling --------------------------------------------------------------
@@ -394,8 +435,10 @@ class LMEngine(EngineBase):
             for i in range(self.n_slots)
         )
         if prefilling and self.prefill_chunk > 1:
-            return self._tick_chunk()
-        return self._tick_decode()
+            with obs_trace.span("serve/prefill"):
+                return self._tick_chunk()
+        with obs_trace.span("serve/decode"):
+            return self._tick_decode()
 
     def _chunk_limit(self, i: int) -> int:
         """Largest safe chunk for slot i (ring-buffer wrap guard)."""
@@ -436,6 +479,10 @@ class LMEngine(EngineBase):
                 if self.slot_pending[i]:
                     continue  # still prefilling this slot
                 self._on_prefill_complete(i, req)
+                if obs_trace.is_enabled():
+                    obs_trace.event("serve/prefill_complete",
+                                    category="request", uid=req.uid,
+                                    prompt_tokens=len(req.prompt))
             else:
                 self.slot_pos[i] += 1
             self._record(req, logits[i])
@@ -492,6 +539,10 @@ class LMEngine(EngineBase):
                 # fall through: the prompt is consumed and this step's
                 # logits are the first generation
                 self._on_prefill_complete(i, req)
+                if obs_trace.is_enabled():
+                    obs_trace.event("serve/prefill_complete",
+                                    category="request", uid=req.uid,
+                                    prompt_tokens=len(req.prompt))
             self._record(req, logits[i])
             req.generated.append(self._next_token(req, logits[i]))
             self._n_generated += 1
@@ -526,6 +577,15 @@ class LMEngine(EngineBase):
                 "rows_observed": self._rows_observed,
             }
         return out
+
+    def _reset_extra_counters(self) -> None:
+        self._n_prompt_tokens = 0
+        self._n_generated = 0
+        self._prefill_ticks = 0
+        self._decode_ticks = 0
+        self._logits_amax = 0.0
+        self._logits_nonfinite = 0
+        self._rows_observed = 0
 
 
 #: Back-compat alias — PRs 0-2 called the slot engine ``ServeEngine``.

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import PrecisionPolicy, FULL
 from repro.models import fno_infer, sfno_infer
+from repro.obs import trace as obs_trace
 
 from .engine import EngineBase
 from .paged.prefix import content_key
@@ -230,8 +231,11 @@ class OperatorEngine(EngineBase):
                 pad = self.max_batch - len(compute)
                 xb = jnp.concatenate([xb, jnp.zeros((pad, *xb.shape[1:]),
                                                     xb.dtype)])
-            yb, telem = self._step_for(res)(self.params, xb)
-            yb = np.asarray(yb)[:len(compute)]
+            with obs_trace.span("serve/operator/batch",
+                                resolution="x".join(map(str, res)),
+                                fill=len(compute)):
+                yb, telem = self._step_for(res)(self.params, xb)
+                yb = np.asarray(yb)[:len(compute)]
             self._n_batches += 1
             if self._telem is not None:
                 self._telem.update(telem)
@@ -316,3 +320,14 @@ class OperatorEngine(EngineBase):
 
         out["tiles"] = tile_resolution_stats()
         return out
+
+    def _reset_extra_counters(self) -> None:
+        """Memo + throughput counter hygiene (exposed through the obs
+        registry's reset path; bench scripts call this between legs)."""
+        self._memo_hits = 0
+        self._memo_misses = 0
+        self._memo_evictions = 0
+        self._n_fields = 0
+        self._n_points = 0
+        self._n_batches = 0
+        self._bucket_counts = {}

@@ -44,6 +44,8 @@ from repro.models.lm import (
     lm_paged_prefill_chunk,
 )
 
+from repro.obs import trace as obs_trace
+
 from ..engine import LMEngine, Request
 from .pool import BlockPool
 from .prefix import PrefixIndex
@@ -136,6 +138,8 @@ class PagedLMEngine(LMEngine):
         b = self.pool.alloc()
         if b is None and self.prefix is not None:
             self.prefix.evict_until(1)
+            obs_trace.event("serve/paged/evict", category="paged",
+                            tick=self._ticks)
             b = self.pool.alloc()
         if b is None:
             raise RuntimeError(
@@ -153,9 +157,13 @@ class PagedLMEngine(LMEngine):
             return block
         if self.pool.free_blocks == 0 and self.prefix is not None:
             self.prefix.evict_until(1)
+            obs_trace.event("serve/paged/evict", category="paged",
+                            tick=self._ticks)
         dst, copy = self.pool.cow(block)
         if copy is not None:
             self._pending_copies.append(copy)
+            obs_trace.event("serve/paged/cow", category="paged",
+                            src=copy[0], dst=copy[1], tick=self._ticks)
         return dst
 
     def _prepare_writes(self, slot_rows: List[Tuple[int, List[int]]]):
@@ -217,6 +225,9 @@ class PagedLMEngine(LMEngine):
             self._bt[i, j] = b
         if hit:
             self._bt_dirty = True
+            obs_trace.event("serve/paged/prefix_hit", category="paged",
+                            uid=req.uid, blocks=len(hit),
+                            tokens=len(hit) * self.block_size)
         return len(hit) * self.block_size
 
     def _reset_slots(self, admitted: List[Tuple[int, int]]):
@@ -320,3 +331,8 @@ class PagedLMEngine(LMEngine):
                 [self.pool.occupancy, paged["fragmentation"],
                  float(self.pool.cow_copies)], jnp.float32))
         return out
+
+    def _reset_extra_counters(self) -> None:
+        super()._reset_extra_counters()
+        self._peak_live_blocks = (
+            self.pool.live_blocks if self.pool is not None else 0)

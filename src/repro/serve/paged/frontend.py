@@ -24,6 +24,9 @@ import dataclasses
 import time
 from typing import Any, AsyncIterator, Dict, List, Optional
 
+from repro.obs import registry
+from repro.obs import trace as obs_trace
+
 
 @dataclasses.dataclass
 class _Tracked:
@@ -81,6 +84,12 @@ class AsyncServeFrontend:
                       queue=asyncio.Queue() if want_stream else None,
                       done=asyncio.Event())
         self._watch[req.uid] = tr
+        if obs_trace.is_enabled():
+            # two async tracks per uid: the whole submit->finish latency
+            # and the TTFT prefix, closed at the first generated token
+            obs_trace.begin("frontend/request", req.uid, category="frontend",
+                            deadline_ms=deadline_ms)
+            obs_trace.begin("frontend/ttft", req.uid, category="frontend")
         return tr
 
     def _ensure_driver(self):
@@ -91,6 +100,20 @@ class AsyncServeFrontend:
         latency_ms = (now - tr.t0) * 1e3
         missed = (tr.deadline_ms is not None and tr.req.status == "done"
                   and latency_ms > tr.deadline_ms)
+        reg = registry()
+        reg.histogram("repro_frontend_latency_ms").observe(latency_ms)
+        reg.counter("repro_frontend_requests_total",
+                    status=tr.req.status).inc()
+        if missed:
+            reg.counter("repro_frontend_deadline_misses_total").inc()
+        if obs_trace.is_enabled():
+            if tr.ttft_s is None:
+                obs_trace.end("frontend/ttft", tr.req.uid,
+                              category="frontend")
+            obs_trace.end("frontend/request", tr.req.uid,
+                          category="frontend", status=tr.req.status,
+                          latency_ms=round(latency_ms, 3),
+                          deadline_missed=bool(missed))
         self.records.append({
             "uid": tr.req.uid,
             "status": tr.req.status,
@@ -120,6 +143,12 @@ class AsyncServeFrontend:
                 gen = getattr(tr.req, "generated", None) or []
                 if tr.ttft_s is None and len(gen) > 0:
                     tr.ttft_s = now - tr.t0
+                    registry().histogram("repro_frontend_ttft_ms").observe(
+                        tr.ttft_s * 1e3)
+                    if obs_trace.is_enabled():
+                        obs_trace.end("frontend/ttft", tr.req.uid,
+                                      category="frontend",
+                                      ttft_ms=round(tr.ttft_s * 1e3, 3))
                 while tr.delivered < len(gen):
                     tok = gen[tr.delivered]
                     tr.delivered += 1
@@ -162,4 +191,5 @@ class AsyncServeFrontend:
                     (sum((x - mean) ** 2 for x in lats) / len(lats)) ** 0.5,
                     3),
             })
+        registry().publish("frontend", out)
         return out

@@ -75,6 +75,13 @@ class TrainerConfig:
     #: already active (explicit ``activate()`` or
     #: ``$REPRO_CALIBRATION_STATE``).
     calibration_state: Optional[str] = None
+    #: Observability (``repro.obs``): turn on the global trace ring (if
+    #: not already on) and record per-step phase spans (``train/data``,
+    #: ``train/step``, ``train/telemetry``, ``train/controller``),
+    #: loss-scale numerics events, and step-wall histograms in the
+    #: metrics registry.  The span calls themselves are free no-ops when
+    #: this is off — bench_obs holds the on/off delta under 5%.
+    obs: bool = False
 
 
 class Trainer:
@@ -125,6 +132,13 @@ class Trainer:
             p.kind is inspect.Parameter.VAR_KEYWORD
             for p in params_sig.values()
         )
+        self._obs = bool(config.obs)
+        if self._obs:
+            from repro.obs import trace as obs_trace
+
+            if not obs_trace.is_enabled():
+                obs_trace.enable()
+        self._last_scale: Optional[float] = None
         self._steps_cache: Dict[Any, Callable] = {}
         self._preempted = False
         self._ckptr = (
@@ -264,9 +278,36 @@ class Trainer:
             self.stats["recompiles"] += 1
         return self._steps_cache[key]
 
+    # -- observability --------------------------------------------------------
+    def _obs_step_end(self, dt: float) -> None:
+        """Per-step metrics + loss-scale numerics events (obs mode only;
+        the extra ``float(scale)`` sync is why this is gated)."""
+        from repro.obs import loss_scale_event, registry
+
+        registry().histogram("repro_train_step_wall_ms").observe(dt * 1e3)
+        registry().counter("repro_train_steps_total").inc()
+        new_scale = float(self.scale_state.scale)
+        if self._last_scale is not None and new_scale != self._last_scale:
+            kind = ("loss_scale_halved" if new_scale < self._last_scale
+                    else "loss_scale_grown")
+            loss_scale_event(kind, new_scale, step=self.step)
+        self._last_scale = new_scale
+
+    def publish_stats(self) -> Dict:
+        """Publish ``self.stats`` into the obs registry as
+        ``repro_train_*`` gauges and return the dict (the registry
+        snapshot is the machine-readable export source)."""
+        from repro.obs import registry
+
+        registry().publish("train", self.stats)
+        registry().gauge("repro_train_step").set(float(self.step))
+        return self.stats
+
     # -- the loop -------------------------------------------------------------
     def run(self, batch_fn: Callable[[int], Dict], steps: Optional[int] = None):
         """batch_fn(step) -> batch pytree (stateless pipeline contract)."""
+        from repro.obs import trace as obs_trace
+
         total = steps if steps is not None else self.cfg.total_steps
         ewma = None
         while self.step < total and not self._preempted:
@@ -278,12 +319,17 @@ class Trainer:
             else:
                 policy = self.cfg.schedule.policy_at(self.step, self.cfg.total_steps)
             fn = self._step_fn(policy)
-            batch = batch_fn(self.step)
+            with obs_trace.span("train/data", step=self.step):
+                batch = batch_fn(self.step)
             t0 = time.perf_counter()
-            self.params, self.opt_state, self.scale_state, loss, finite, telem = fn(
-                self.params, self.opt_state, self.scale_state, batch
-            )
-            loss = float(loss)
+            # the span brackets the host call plus the float(loss) sync,
+            # so its duration carries the device wall of the step
+            with obs_trace.span("train/step", step=self.step,
+                                policy=policy.name):
+                self.params, self.opt_state, self.scale_state, loss, finite, telem = fn(
+                    self.params, self.opt_state, self.scale_state, batch
+                )
+                loss = float(loss)
             dt = time.perf_counter() - t0
             if not bool(finite):
                 self.stats["skipped_steps"] += 1
@@ -291,18 +337,24 @@ class Trainer:
                 self.stats["straggler_steps"] += 1
             ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
             if self.telemetry is not None:
-                self.telemetry.update(telem)
+                with obs_trace.span("train/telemetry", step=self.step):
+                    self.telemetry.update(telem)
+            if self._obs:
+                self._obs_step_end(dt)
             self.history.append({"step": self.step, "loss": loss, "policy": policy.name, "dt": dt})
             self.step += 1
             if (self.controller is not None
                     and self.step % self.controller.config.interval == 0):
-                if self.controller.update(self.telemetry.take_window(),
-                                          step=self.step):
-                    self.stats["policy_changes"] += 1
+                with obs_trace.span("train/controller", step=self.step):
+                    if self.controller.update(self.telemetry.take_window(),
+                                              step=self.step):
+                        self.stats["policy_changes"] += 1
             if self._ckptr is not None and self.step % self.cfg.ckpt_every == 0:
                 self.save()
         if self._preempted and self._ckptr is not None:
             self.save()
         if self._ckptr is not None:
             self._ckptr.wait()
+        if self._obs:
+            self.publish_stats()
         return self.history

@@ -103,23 +103,35 @@ class CalibrationCache:
         different kernel version or backend), a corrupt entry, or one
         that never passed oracle validation — in every case the caller
         falls back to the static heuristic.
+
+        Each outcome lands in the numerics-event stream
+        (``tile_cache_hit``/``miss``/``stale``) so a run timeline shows
+        which resolutions got tuned tiles and which fell back.
         """
         import jax
 
-        ent = self.entries.get(entry_key(family, shape, dtype))
+        from repro.obs import tile_cache_event
+
+        key = entry_key(family, shape, dtype)
+        ent = self.entries.get(key)
         if ent is None:
             self.counters["misses"] += 1
+            tile_cache_event("miss", family, key)
             return None
         if not _entry_ok(ent) or not ent.get("validated", False):
             self.counters["stale"] += 1
+            tile_cache_event("stale", family, key)
             return None
         if ent.get("kernel_version") != KERNEL_VERSION:
             self.counters["stale"] += 1
+            tile_cache_event("stale", family, key)
             return None
         if ent.get("backend") != jax.default_backend():
             self.counters["stale"] += 1
+            tile_cache_event("stale", family, key)
             return None
         self.counters["hits"] += 1
+        tile_cache_event("hit", family, key)
         return ent
 
     def put(self, ent: dict) -> None:

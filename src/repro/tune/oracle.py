@@ -131,9 +131,19 @@ def check(cand: Candidate, *, interpret: Optional[bool] = None,
         got = got + perturb * budget
     diff = np.abs(got - ref)
     excess = float((diff - budget).max())
-    return {
+    result = {
         "passed": bool(np.all(diff <= budget)),
         "max_err": float(diff.max()),
         "budget_min": float(budget.min()),
         "worst_excess": excess,
     }
+    if not result["passed"]:
+        from repro.obs import oracle_reject
+        from .cache import entry_key
+
+        oracle_reject(
+            f"{entry_key(cand.family, cand.shape, cand.dtype)}"
+            f"|b{cand.block_fwd}x{cand.block_bwd}",
+            max_err=result["max_err"], budget_min=result["budget_min"],
+            worst_excess=excess)
+    return result
