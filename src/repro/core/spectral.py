@@ -208,6 +208,7 @@ def spectral_conv_apply(
     policy: PrecisionPolicy = FULL,
     use_pallas: Optional[bool] = None,
     site: str = "model/spectral",
+    fuse_spectral: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Apply the Fourier convolution to ``x`` of shape (batch, ch, *spatial).
 
@@ -226,6 +227,14 @@ def spectral_conv_apply(
     training-grade Pallas kernels (custom-VJP backward, same telemetry
     taps), while Tucker keeps the einsum path — its core tensor has no
     mode-major kernel layout.
+
+    ``fuse_spectral``: tri-state (``kernels.ops.resolve_fuse_spectral``;
+    kill switch ``REPRO_FUSE_SPECTRAL=0``).  When it resolves on — and
+    the Pallas path is active, the layer is dense, and
+    ``fused_spectral_viable`` admits the shape/policy (VMEM fit at the
+    floor tile, no active autoprec collector) — the *whole* pipeline
+    runs as the one-grid ``spectral_fused`` megakernel instead of
+    rFFT/contract/irFFT round-tripping HBM between stages.
     """
     ndim = len(modes)
     spatial = x.shape[2:]
@@ -240,6 +249,19 @@ def spectral_conv_apply(
     fft_in = policy.at(f"{site}/fft_in")
     ctr = policy.at(f"{site}/contract")
     fft_out = policy.at(f"{site}/fft_out")
+
+    if use_pallas and kind == "dense":
+        from repro.kernels import ops as kops
+
+        if kops.resolve_fuse_spectral(fuse_spectral) and \
+                kops.fused_spectral_viable(
+                    fft_in, ctr, x.shape[0], x.shape[1],
+                    _out_channels(params), spatial, modes):
+            # the megakernel: one Pallas grid for the whole pipeline —
+            # the spectrum lives in VMEM between the transform stages
+            return kops.spectral_conv_fused(
+                x, params["w_re"], params["w_im"], modes,
+                policy=policy, site=site)
 
     # 1. stabiliser before the forward FFT (only active for half spectral)
     x = fft_in.stabilize(x)

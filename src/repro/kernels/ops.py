@@ -24,13 +24,19 @@ import jax.numpy as jnp
 from repro.core.precision import ComplexPair
 from repro.precision import FULL, PrecisionPolicy
 from .spectral_contract import (
+    VMEM_BUDGET,
     cp_vmem_bytes,
+    fused_supported,
+    fused_vmem_bytes,
+    fused_vmem_bytes_bwd,
     lshared_vmem_bytes,
+    pick_block_b,
     pick_block_l,
     pick_block_m,
     spectral_contract_cp_pallas,
     spectral_contract_lshared_pallas,
     spectral_contract_pallas,
+    spectral_fused_pallas,
     vmem_bytes,
     vmem_bytes_bwd,
 )
@@ -74,6 +80,103 @@ def resolve_fuse_casts(flag: Optional[bool] = None) -> bool:
     if env is not None and env != "":
         return env.lower() not in ("0", "false", "no")
     return True
+
+
+def resolve_fuse_spectral(flag: Optional[bool] = None) -> bool:
+    """Resolve the tri-state ``fuse_spectral`` setting.
+
+    Explicit True/False wins; ``None`` means *auto*: on unless the env
+    var ``REPRO_FUSE_SPECTRAL`` is falsy (kill switch).  When on — and
+    the layer is dense, the shape passes :func:`fused_supported`, the
+    batch=1 working set fits VMEM, and no autoprec collector is active
+    (the fused spectrum never touches HBM, so the per-stage taps have
+    nothing to observe) — ``core/spectral`` dispatches the whole
+    rFFT → contract → irFFT pipeline into one Pallas grid
+    (``spectral_fused``) instead of the three-stage path.
+    """
+    if flag is not None:
+        return bool(flag)
+    env = os.environ.get("REPRO_FUSE_SPECTRAL")
+    if env is not None and env != "":
+        return env.lower() not in ("0", "false", "no")
+    return True
+
+
+def fused_spectral_viable(fft_in, ctr, B: int, I: int, O: int,
+                          spatial: Sequence[int],
+                          modes: Sequence[int]) -> bool:
+    """Can this dense layer run the fused megakernel bit-for-spec?
+
+    Requires structural support (modes fit the truncated-DFT factor
+    layout), a VMEM fit for the training working set at the floor tile
+    ``block_b=1``, an inactive autoprec collector (the staged path owns
+    telemetry — its taps see the HBM spectrum the fused path never
+    materialises), and spectral sites that agree on one quantisation
+    spec (every registry policy does; bespoke overlays that quantise
+    ``fft_in`` differently from ``contract`` keep the staged path,
+    whose per-stage semantics they address).
+    """
+    from repro.autoprec.telemetry import telemetry_active
+
+    if telemetry_active():
+        return False
+    if not fused_supported(tuple(spatial), tuple(modes)):
+        return False
+    if fused_vmem_bytes_bwd(1, I, O, tuple(spatial), tuple(modes),
+                            itemsize=4) > VMEM_BUDGET:
+        return False
+    if fft_in.quantize_fmt != ctr.quantize_fmt:
+        return False
+    if fft_in.quantize_fmt is not None and fft_in.compute != ctr.compute:
+        return False
+    return True
+
+
+def _fused_qspec(ctr):
+    """(cast_to, sim_fmt) static kernel params for a contract-site rule.
+
+    ``half`` quantisation → round operand tiles onto the half grid in
+    VMEM (``cast_to``); simulated fp8 → fp8-grid rounding of the
+    spectrum (``sim_fmt``) *then* the half storage cast, exactly the
+    staged ``fft_in.quantize → half contraction`` composition.
+    """
+    fmt = ctr.quantize_fmt
+    if fmt is None:
+        return None, None
+    if fmt == "half":
+        return ctr.compute, None
+    return ctr.compute, fmt
+
+
+def gather_corner_weights(w_re, w_im, modes: Sequence[int]):
+    """Fold per-corner dense weights into the fused kernel's layout.
+
+    ``w_re``/``w_im``: (corners, I, O, *modes) split-real corner
+    weights.  The fused kernel's forward DFT keeps, per truncated axis,
+    the low block ``[0, m)`` then the high block ``[S-m, S)`` — so
+    corner ``c``'s weight lands at axis-``k`` rows ``[m, 2m)`` when bit
+    ``k`` of ``c`` is set, ``[0, m)`` otherwise (last axis: always
+    ``[0, m)``).  Returns ``(wgr, wgi)`` of shape (I, O, Mh) with the
+    row-major flattening the kernel contracts over.  Pure differentiable
+    ``jnp`` — gradients scatter back to the per-corner params.
+    """
+    nc, I, O, *mlist = w_re.shape
+    ndim = len(modes)
+    rows = tuple(2 * m for m in modes[:-1]) + (modes[-1],)
+    out_r = jnp.zeros((I, O, *rows), w_re.dtype)
+    out_i = jnp.zeros((I, O, *rows), w_im.dtype)
+    for c in range(nc):
+        sl = [slice(None), slice(None)]
+        for ax in range(ndim - 1):
+            m = modes[ax]
+            sl.append(slice(m, 2 * m) if (c >> ax) & 1 else slice(0, m))
+        sl.append(slice(0, modes[-1]))
+        out_r = out_r.at[tuple(sl)].set(w_re[c])
+        out_i = out_i.at[tuple(sl)].set(w_im[c])
+    Mh = 1
+    for r in rows:
+        Mh *= r
+    return out_r.reshape(I, O, Mh), out_i.reshape(I, O, Mh)
 
 
 def _site_of(policy, site: str):
@@ -289,6 +392,87 @@ def spectral_contract(
     return pair.to_complex()
 
 
+def spectral_conv_fused(
+    x, w_re, w_im, modes: Sequence[int], *, policy=FULL,
+    block_b: Optional[int] = None, block_b_bwd: Optional[int] = None,
+    site: str = "model/spectral",
+):
+    """The whole dense Fourier convolution in one Pallas grid.
+
+    Fused rFFT → mode contraction → irFFT: the forward/inverse
+    transforms run as precomputed truncated-DFT factor matmuls over the
+    VMEM-resident batch tile, the contraction reuses the dense 4-real-
+    matmul schedule with the ``cast_to``/``sim_fmt`` quantise prologue,
+    and the spectrum never round-trips HBM between stages.  Semantically
+    this is ``spectral_conv_apply`` for a dense layer: the stabiliser,
+    boundary quantisation, per-corner contraction and output cast all
+    happen — the corners as row blocks of the gathered weight, the
+    quantisation on in-VMEM tiles.
+
+    ``x``: real (B, I, *spatial); ``w_re``/``w_im``: (corners, I, O,
+    *modes) split-real corner weights (the layer's ``params``);
+    ``modes``: retained modes per axis.  ``policy``: a
+    ``PrecisionPolicy`` resolved here at ``{site}/fft_in|contract|
+    fft_out``, exactly like the staged pipeline.  ``block_b`` tiles the
+    batch axis (``None`` → calibration cache, then the VMEM ladder).
+    Returns real (B, O, *spatial) at ``x``'s dtype.
+    """
+    if not isinstance(policy, PrecisionPolicy):
+        raise ValueError(
+            "spectral_conv_fused resolves fft_in/contract/fft_out sites "
+            "itself: pass the PrecisionPolicy, not a SitePrecision")
+    fft_in = policy.at(f"{site}/fft_in")
+    ctr = policy.at(f"{site}/contract")
+    fft_out = policy.at(f"{site}/fft_out")
+
+    ndim = len(modes)
+    spatial = tuple(x.shape[2:])
+    if len(spatial) != ndim:
+        raise ValueError(
+            f"spectral_conv_fused: x {x.shape} vs modes {tuple(modes)}")
+    if not fused_supported(spatial, modes):
+        raise ValueError(
+            f"spectral_conv_fused: spatial {spatial} cannot retain modes "
+            f"{tuple(modes)} in the fused factor layout — the staged "
+            f"path in core/spectral.py handles this shape")
+    in_dtype = x.dtype
+    B, I = x.shape[:2]
+    O = w_re.shape[2]
+
+    # 1. stabiliser before the forward transform (half spectral only) —
+    #    the one stage that stays outside the grid: it reads/writes the
+    #    HBM-resident physical input the caller already owns.
+    x = fft_in.stabilize(x)
+
+    # 2–6. everything else is one kernel launch.
+    wgr, wgi = gather_corner_weights(w_re, w_im, modes)
+    cast_to, sim_fmt = _fused_qspec(ctr)
+    half = ctr.spectral_dtype or jnp.float32
+    if block_b is None:
+        # the fused family streams f32 operands (quantisation happens on
+        # tiles in VMEM), so shape keys and working sets price at
+        # itemsize 4 whatever the policy's storage dtype
+        block_b, tuned_bwd, _src = _resolve_blocks(
+            "spectral_fused", (B, I, O, *spatial, *modes), half,
+            lambda: pick_block_b(B, I, O, spatial, modes, itemsize=4),
+        )
+        block_b_bwd = block_b_bwd or tuned_bwd
+
+    with jax.named_scope(ctr.site):
+        y = spectral_fused_pallas(
+            x.astype(jnp.float32), wgr, wgi, modes=tuple(modes),
+            block_b=block_b, block_b_bwd=block_b_bwd,
+            interpret=_use_interpret(), cast_to=cast_to, sim_fmt=sim_fmt,
+        )
+
+    from repro.autoprec.telemetry import fmt_of, tap
+
+    tap(f"{site}/fft_out", y, fmt=fmt_of(fft_out))
+    if fft_out.spectral_is_half:
+        y = y.astype(fft_out.compute_dtype)
+    return y.astype(in_dtype)
+
+
 def cp_mode_factor(lam, mode_factors: Sequence) -> jnp.ndarray:
     """Fold λ (R,) and the per-axis CP factors (m_k, R) into the combined
     mode factor ``W[r, m] = λ_r Π_k U_mk[m_k, r]`` over the row-major
@@ -434,9 +618,11 @@ def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
 
 __all__ = [
     "spectral_contract", "spectral_contract_cp", "spectral_contract_lshared",
+    "spectral_conv_fused", "gather_corner_weights", "fused_spectral_viable",
     "cp_mode_factor", "flash_attention", "rmsnorm", "resolve_use_pallas",
-    "resolve_fuse_casts", "tile_resolution_stats",
+    "resolve_fuse_casts", "resolve_fuse_spectral", "tile_resolution_stats",
     "reset_tile_resolution_stats",
     "vmem_bytes", "vmem_bytes_bwd", "cp_vmem_bytes", "lshared_vmem_bytes",
-    "pick_block_m", "pick_block_l",
+    "fused_vmem_bytes", "fused_vmem_bytes_bwd",
+    "pick_block_m", "pick_block_l", "pick_block_b",
 ]

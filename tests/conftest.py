@@ -22,16 +22,32 @@ import sys
 import types
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running differential/fuzz cases; deselect with "
+        "-m 'not slow' for the fast local loop (CI runs the full suite)")
+
+
 def pytest_report_header(config):
     try:
-        from repro.kernels.ops import resolve_use_pallas
+        from repro.kernels.ops import resolve_fuse_spectral, resolve_use_pallas
 
         on = resolve_use_pallas(None)
+        fused = on and resolve_fuse_spectral(None)
     except Exception:  # pragma: no cover - src not importable yet
         on = bool(os.environ.get("REPRO_USE_PALLAS"))
+        fused = on
     path = "pallas" if on else "einsum"
+    kernels = ["einsum"]
+    if on:
+        kernels = ["dense", "dense-fused", "cp", "lshared"]
+        if fused:
+            kernels.append("spectral_fused")
     return (f"repro spectral path: {path} "
-            f"(REPRO_USE_PALLAS={os.environ.get('REPRO_USE_PALLAS')!r})")
+            f"(REPRO_USE_PALLAS={os.environ.get('REPRO_USE_PALLAS')!r}, "
+            f"REPRO_FUSE_SPECTRAL={os.environ.get('REPRO_FUSE_SPECTRAL')!r}); "
+            f"active kernel set: {', '.join(kernels)}")
 
 try:  # pragma: no cover - prefer the real thing
     import hypothesis  # noqa: F401

@@ -240,6 +240,24 @@ class TestSeededKernelViolations:
         assert oob and all(f.severity == ERROR for f in oob)
         assert "in[0]" in oob[0].detail
 
+    def test_fused_fake_oob_index_map_detected(self):
+        """A ``spectral_fused``-shaped call (batch-tiled grid over a
+        4-rank operand) whose batch index map overruns the padded
+        extent is caught at exactly the index-oob check — the real
+        fused family's traced calls stay clean
+        (``TestCleanTree::test_kernels_pass_clean``)."""
+        call = _call(
+            _plain_copy_kernel, grid=(2,),
+            in_specs=[_FakeSpec((2, 4, 8, 8), lambda i: (i + 1, 0, 0, 0))],
+            in_shapes=[(4, 4, 8, 8)],
+            out_specs=[_FakeSpec((2, 4, 8, 8), lambda i: (i, 0, 0, 0))],
+            out_shapes=[(4, 4, 8, 8)])
+        findings = check_call(call, "seeded:spectral_fused")
+        oob = [f for f in findings if f.check == "index-oob"]
+        assert oob and all(f.severity == ERROR for f in oob)
+        assert "in[0]" in oob[0].detail
+        assert [f.check for f in findings if f.check != "index-oob"] == []
+
     def test_uncovered_output_block_detected(self):
         call = _call(
             _plain_copy_kernel, grid=(1,),
@@ -285,6 +303,13 @@ class TestCleanTree:
     def test_kernels_pass_clean(self):
         findings = kernels_pass()
         assert [f for f in findings if f.severity == ERROR] == []
+
+    def test_kernels_pass_covers_fused_family(self):
+        from repro.analyze.kernels import kernel_families
+
+        names = [name for name, _, _ in kernel_families()]
+        assert "spectral_fused/fwd" in names
+        assert "spectral_fused/bwd" in names
 
     @pytest.mark.parametrize("policy_name", ["full", "mixed_fno_fp16"])
     def test_model_forward_has_no_errors(self, policy_name):

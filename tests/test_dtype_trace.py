@@ -21,7 +21,7 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
 
 _KEYS = [name + suffix
          for name in sorted(POLICIES)
-         for suffix in ("", "+pallas")]
+         for suffix in ("", "+pallas", "+fused")]
 
 
 def _load_goldens():
@@ -31,7 +31,10 @@ def _load_goldens():
 
 def _compute(key):
     name, _, suffix = key.partition("+")
-    return dtype_trace(get_policy(name), use_pallas=suffix == "pallas")
+    # "+pallas" pins the *staged* Pallas pipeline (dtype_trace defaults
+    # fuse_spectral=False); "+fused" snapshots the megakernel dispatch
+    return dtype_trace(get_policy(name), use_pallas=suffix in ("pallas", "fused"),
+                       fuse_spectral=suffix == "fused")
 
 
 @pytest.fixture(scope="module")
@@ -79,3 +82,21 @@ class TestTraceInvariants:
         trace = dtype_trace(get_policy("full"))
         for entry in trace:
             assert "float16" not in entry and "bfloat16" not in entry, entry
+
+    @pytest.mark.parametrize("name", sorted(POLICIES))
+    def test_fused_path_spectrum_never_leaves_vmem(self, name):
+        """The version-robust megakernel invariant: the fused dispatch
+        lowers to exactly one kernel launch with no FFT primitives and
+        zero HBM-visible half casts between rFFT and irFFT — everything
+        between the transforms lives inside the one pallas_call (the
+        trace lists a launch before descending into its body, so every
+        entry before it is HBM-visible staging)."""
+        trace = dtype_trace(get_policy(name), use_pallas=True,
+                            fuse_spectral=True)
+        assert not any(e.startswith("fft:") for e in trace), trace
+        launches = [i for i, e in enumerate(trace)
+                    if e.startswith("pallas_call:")]
+        assert len(launches) == 1, trace
+        for entry in trace[:launches[0]]:
+            assert "float16" not in entry and "bfloat16" not in entry, (
+                f"HBM-visible half cast before the fused launch: {entry}")

@@ -3,6 +3,8 @@
 All kernels run in interpret mode on CPU (the TPU compile path is covered
 by the dry-run, which lowers the same call sites for the production mesh).
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,13 +15,12 @@ from repro.core import ComplexPair, FULL, get_policy
 from repro.kernels import ops, ref
 from repro.kernels.spectral_contract import spectral_contract_pallas, vmem_bytes
 
+from helpers import rand_complex
+
 jax.config.update("jax_platform_name", "cpu")
 
-
-def _rand_complex(rng, shape, scale=1.0):
-    return jnp.asarray(
-        scale * (rng.randn(*shape) + 1j * rng.randn(*shape)), jnp.complex64
-    )
+# this module's sweeps predate the shared helper and pinned unit scale
+_rand_complex = functools.partial(rand_complex, scale=1.0)
 
 
 class TestSpectralContractKernel:
@@ -78,6 +79,7 @@ class TestSpectralContractKernel:
         assert got.re.dtype == jnp.bfloat16
         assert got.shape == (2, 8, 6, 5)
 
+    @pytest.mark.slow
     @given(
         st.integers(min_value=1, max_value=3),
         st.integers(min_value=1, max_value=12),

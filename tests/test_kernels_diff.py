@@ -37,7 +37,6 @@ from repro.core import (
 )
 from repro.core.precision import ComplexPair
 from repro.core.spectral import _cp_exprs, _dense_expr
-from repro.core.theory import prec_upper_bound
 from repro.kernels import ops, ref
 from repro.kernels.spectral_contract import (
     pick_block_m,
@@ -47,41 +46,19 @@ from repro.models import FNOConfig, fno_apply, init_fno
 from repro.precision import POLICIES
 from repro.train import Trainer, TrainerConfig, relative_l2
 
+from helpers import (
+    GRAD_TOLS,
+    HALF_POLICY_NAMES,
+    MODES_BY_NDIM,
+    POLICY_NAMES,
+    SPATIAL_BY_NDIM,
+    assert_within_budget as _assert_within_budget,
+    fused_mag,
+    rand_complex as _randc,
+    rel_err as _rel_err,
+)
+
 jax.config.update("jax_platform_name", "cpu")
-
-POLICY_NAMES = sorted(POLICIES)
-F32_EPS = float(np.finfo(np.float32).eps)
-#: one small shape per mode dimensionality (kept tiny: every case jit-
-#: compiles its own interpret-mode kernel)
-MODES_BY_NDIM = {1: (7,), 2: (3, 5), 3: (2, 3, 2)}
-
-
-def _randc(rng, shape, scale=0.5):
-    return jnp.asarray(
-        scale * (rng.randn(*shape) + 1j * rng.randn(*shape)), jnp.complex64
-    )
-
-
-def _to_np_complex(y):
-    if isinstance(y, ComplexPair):
-        y = y.to_complex()
-    return np.asarray(y)
-
-
-def _assert_within_budget(y_pallas, y_einsum, eps, mag, stages, label):
-    """|pallas − einsum| ≤ stages·4εM + 32·ε_f32·M + atol, elementwise.
-
-    ``mag`` is the contraction of operand magnitudes — the per-output
-    empirical M of Thm 3.2; each requantising stage of either path may
-    contribute up to ``prec_upper_bound(eps, M) = 4εM``.
-    """
-    budget = stages * prec_upper_bound(eps, mag) + 32 * F32_EPS * mag + 1e-5
-    diff = np.abs(_to_np_complex(y_pallas) - _to_np_complex(y_einsum))
-    worst = float((diff - budget).max())
-    assert np.all(diff <= budget), (
-        f"{label}: pallas-vs-einsum exceeds the Thm 3.2 budget by {worst:.3e}"
-        f" (max diff {diff.max():.3e}, min budget {budget.min():.3e})"
-    )
 
 
 def _diff_dense(policy_name, B, I, O, modes, seed, block_m=8):
@@ -158,6 +135,7 @@ class TestDifferentialAllPolicies:
         _diff_cp(policy_name, B=2, I=3, O=4, R=3, modes=MODES_BY_NDIM[ndim],
                  seed=10 + ndim)
 
+    @pytest.mark.slow
     @given(
         st.integers(min_value=1, max_value=3),
         st.integers(min_value=1, max_value=13),
@@ -274,28 +252,6 @@ def _grad_leaves(g):
     return jax.tree_util.tree_leaves(g)
 
 
-def _rel_err(a, b):
-    dt = np.complex128 if np.iscomplexobj(np.asarray(a)) else np.float64
-    a = np.asarray(a, dt).ravel()
-    b = np.asarray(b, dt).ravel()
-    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-12))
-
-
-#: grad-parity tolerance per registry policy: tight where the contract
-#: site stays f32 (full and the AMP-only sets), storage-precision-sized
-#: where it quantises (half/fp8 families)
-GRAD_TOLS = {
-    "full": 1e-5,
-    "amp_bf16": 1e-4,
-    "amp_fp16": 1e-4,
-    "half_fno_only": 0.03,
-    "mixed_fno_bf16": 0.08,
-    "mixed_fno_fp16": 0.03,
-    "sim_fp8_e4m3": 0.03,
-    "sim_fp8_e5m2": 0.03,
-}
-
-
 def _grad_parity(policy_name, factorization, modes, spatial, seed=11):
     policy = get_policy(policy_name)
     rng = np.random.RandomState(seed)
@@ -359,6 +315,7 @@ class TestGradients:
         assert abs(float(l_p) - float(l_e)) <= tol * (abs(float(l_e)) + 1e-6)
         assert _rel_err(np.asarray(g_p), np.asarray(g_e)) <= tol
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("factorization", ["dense", "cp"])
     def test_train_step_parity_with_loss_scaling(self, factorization):
         """Full FNO/TFNO train steps through the Trainer, pallas vs
@@ -438,13 +395,6 @@ class TestGradients:
 # ---------------------------------------------------------------------------
 # Fused quantize prologue (cast_to)
 # ---------------------------------------------------------------------------
-
-#: policies whose contract site stores at a half format — only these can
-#: take the fused path (full-precision sites have nothing to round)
-HALF_POLICY_NAMES = [
-    n for n in POLICY_NAMES
-    if get_policy(n).at("fno/layer0/spectral/contract").spectral_is_half
-]
 
 
 class TestFusedCastPrologue:
@@ -536,3 +486,216 @@ class TestFusedCastPrologue:
         assert resolve_fuse_casts(None) is True
         monkeypatch.delenv("REPRO_FUSE_CASTS")
         assert resolve_fuse_casts(None) is True  # default ON
+
+
+# ---------------------------------------------------------------------------
+# Fused rFFT -> contract -> irFFT megakernel
+# ---------------------------------------------------------------------------
+
+
+def _fused_layer(seed, I, O, modes):
+    return init_spectral_weights(
+        jax.random.PRNGKey(seed), I, O, modes, "dense")
+
+
+def _diff_fused(policy_name, B, I, O, spatial, modes, seed):
+    """The one-grid megakernel vs the staged einsum reference, under the
+    composed Thm 3.2 budget: each path has (at most) four requantising
+    stages — forward transform, quantise, contract, inverse transform —
+    so the elementwise budget carries stages=8, one ``4 eps M`` term per
+    stage of either side, with ``M`` the composed magnitude envelope of
+    the whole pipeline (``helpers.fused_mag``)."""
+    policy = get_policy(policy_name)
+    fft_in = policy.at("fno/layer0/spectral/fft_in")
+    ctr = policy.at("fno/layer0/spectral/contract")
+    assert ops.fused_spectral_viable(fft_in, ctr, B, I, O, spatial, modes), (
+        "test shape must engage the fused path", spatial, modes)
+    rng = np.random.RandomState(seed)
+    params = _fused_layer(seed, I, O, modes)
+    x = jnp.asarray(rng.randn(B, I, *spatial), jnp.float32)
+
+    y_f = spectral_conv_apply(params, x, modes, policy, use_pallas=True,
+                              fuse_spectral=True, site="fno/layer0/spectral")
+    y_s = spectral_conv_apply(params, x, modes, policy, use_pallas=False,
+                              site="fno/layer0/spectral")
+    assert y_f.shape == y_s.shape == (B, O, *spatial)
+    assert y_f.dtype == y_s.dtype, (policy_name, y_f.dtype, y_s.dtype)
+
+    xs = fft_in.stabilize(x)
+    wgr, wgi = ops.gather_corner_weights(
+        params["w_re"], params["w_im"], modes)
+    mag = fused_mag(np.asarray(xs, np.float64), np.asarray(wgr, np.float64),
+                    np.asarray(wgi, np.float64), spatial, modes)
+    _assert_within_budget(
+        np.asarray(y_f, np.float64), np.asarray(y_s, np.float64),
+        ctr.eps, mag, stages=8,
+        label=f"fused {policy_name} B{B} I{I} O{O} "
+              f"spatial{spatial} modes{modes}")
+
+
+class TestFusedMegakernel:
+    """Differential proof for the ``spectral_fused`` family: the whole
+    rFFT -> contract -> irFFT pipeline in one Pallas grid must stay
+    within the composed Thm 3.2 budget against the staged einsum path,
+    for every registry policy, on odd / non-MXU-aligned grids."""
+
+    @pytest.mark.parametrize("policy_name", POLICY_NAMES)
+    @pytest.mark.parametrize("ndim", [1, 2, 3])
+    def test_fused_vs_staged_all_policies(self, policy_name, ndim):
+        _diff_fused(policy_name, B=2, I=3, O=4,
+                    spatial=SPATIAL_BY_NDIM[ndim],
+                    modes=MODES_BY_NDIM[ndim], seed=40 + ndim)
+
+    def test_fused_matches_einsum_reference_full(self):
+        """Against the pure jnp staged reference (no Pallas anywhere),
+        full precision: the truncated-DFT factorisation itself."""
+        _diff_fused("full", B=1, I=2, O=2, spatial=(8, 16),
+                    modes=(4, 5), seed=51)
+
+    @pytest.mark.slow
+    @given(
+        st.integers(min_value=1, max_value=3),
+        st.integers(min_value=1, max_value=5),
+        st.integers(min_value=1, max_value=5),
+        st.integers(min_value=5, max_value=14),
+        st.integers(min_value=5, max_value=15),
+        st.sampled_from(sorted(POLICIES)),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_property_fuzzed_shapes(self, B, I, O, S0, S1, policy_name):
+        """Hypothesis-fuzzed 2D shapes: odd spatial dims, modes that do
+        not divide the batch tile, Nyquist-touching last-axis modes."""
+        m0 = max(1, S0 // 2 - 1)           # corner blocks must not overlap
+        m1 = S1 // 2 + 1                   # retain the full rfft extent
+        seed = B * 100000 + I * 10000 + O * 1000 + S0 * 16 + S1
+        _diff_fused(policy_name, B, I, O, (S0, S1), (m0, m1), seed)
+
+    def test_fused_fp64_gradcheck(self):
+        """fp64 central-difference check of the fused custom VJP itself
+        (transposed-pipeline backward kernel), on a tiny 2D case in
+        interpret mode, sampling entries of each operand."""
+        from repro.kernels.spectral_contract import spectral_fused_pallas
+
+        jax.config.update("jax_enable_x64", True)
+        try:
+            spatial, modes = (7, 8), (3, 3)
+            rows_flat = (2 * modes[0]) * modes[1]
+            rng = np.random.RandomState(7)
+            shapes = [(1, 2, *spatial), (2, 3, rows_flat), (2, 3, rows_flat)]
+            args = [jnp.asarray(rng.randn(*s), jnp.float64) for s in shapes]
+            c = jnp.asarray(rng.randn(1, 3, *spatial), jnp.float64)
+
+            def loss(x, wgr, wgi):
+                y = spectral_fused_pallas(
+                    x, wgr, wgi, modes=modes, block_b=1, interpret=True)
+                return jnp.sum(y * c)
+
+            grads = jax.grad(loss, argnums=(0, 1, 2))(*args)
+            h = 1e-6
+            for k in range(3):
+                g = np.asarray(grads[k])
+                flat = np.asarray(args[k], np.float64)
+                idxs = [np.unravel_index(j, g.shape) for j in
+                        rng.choice(g.size, size=min(8, g.size),
+                                   replace=False)]
+                for idx in idxs:
+                    plus = flat.copy(); plus[idx] += h
+                    minus = flat.copy(); minus[idx] -= h
+                    ap = list(args); ap[k] = jnp.asarray(plus)
+                    am = list(args); am[k] = jnp.asarray(minus)
+                    fd = (float(loss(*ap)) - float(loss(*am))) / (2 * h)
+                    np.testing.assert_allclose(
+                        g[idx], fd, rtol=1e-5, atol=1e-6,
+                        err_msg=f"arg {k} idx {idx}")
+        finally:
+            jax.config.update("jax_enable_x64", False)
+
+    @pytest.mark.slow
+    def test_train_step_parity_fused_vs_staged_fp16_loss_scale(self):
+        """Full FNO train steps through the Trainer, fused megakernel vs
+        the staged Pallas path, under the fp16 policy whose
+        ``train/loss_scale`` site is on — the loss-scale interaction
+        rides through the fused custom VJP."""
+        cfg = FNOConfig(in_channels=1, out_channels=1, hidden_channels=8,
+                        lifting_channels=8, projection_channels=8,
+                        n_layers=2, modes=(4, 4), factorization="dense")
+        params = init_fno(jax.random.PRNGKey(1), cfg)
+        rng = np.random.RandomState(1)
+        batches = [
+            {"a": jnp.asarray(rng.randn(4, 1, 12, 12), jnp.float32),
+             "u": jnp.asarray(rng.randn(4, 1, 12, 12), jnp.float32)}
+            for _ in range(3)
+        ]
+
+        from repro.core import PrecisionSchedule
+
+        results = {}
+        for fuse in (False, True):
+            def loss_fn(p, batch, policy, use_pallas=None, fuse=fuse):
+                c = dataclasses.replace(cfg, use_pallas=use_pallas,
+                                        fuse_spectral=fuse)
+                return relative_l2(fno_apply(p, batch["a"], c, policy),
+                                   batch["u"])
+
+            tr = Trainer(loss_fn, params, TrainerConfig(
+                total_steps=3,
+                schedule=PrecisionSchedule.constant("mixed_fno_fp16"),
+                use_pallas=True,
+            ))
+            hist = tr.run(lambda step: batches[step])
+            results[fuse] = (tr.params, tr.scale_state, hist)
+        p_s, s_s, h_s = results[False]
+        p_f, s_f, h_f = results[True]
+        assert float(s_s.scale) == float(s_f.scale)
+        # both paths round the spectrum onto the same fp16 grid but order
+        # their f32 accumulations differently; 3 accumulated steps
+        for a, b in zip(_grad_leaves(p_f), _grad_leaves(p_s), strict=True):
+            assert _rel_err(a, b) <= 5e-3
+        for hs, hf in zip(h_s, h_f, strict=True):
+            assert abs(hs["loss"] - hf["loss"]) <= 0.02 * (abs(hs["loss"]) + 1e-6)
+
+    def test_unviable_shapes_fall_back_to_staged(self):
+        """Corner overlap (2m > S) and non-dense factorisations must
+        keep the staged path — same result with the flag forced on."""
+        policy = get_policy("full")
+        rng = np.random.RandomState(9)
+        x = jnp.asarray(rng.randn(2, 3, 5, 8), jnp.float32)
+        params = _fused_layer(9, 3, 4, (3, 3))  # 2*3 > 5: unsupported
+        fft_in = policy.at("fno/layer0/spectral/fft_in")
+        ctr = policy.at("fno/layer0/spectral/contract")
+        assert not ops.fused_spectral_viable(
+            fft_in, ctr, 2, 3, 4, (5, 8), (3, 3))
+        y_on = spectral_conv_apply(params, x, (3, 3), policy,
+                                   use_pallas=True, fuse_spectral=True)
+        y_off = spectral_conv_apply(params, x, (3, 3), policy,
+                                    use_pallas=True, fuse_spectral=False)
+        np.testing.assert_allclose(np.asarray(y_on), np.asarray(y_off),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_resolve_fuse_spectral_env_and_flag(self, monkeypatch):
+        from repro.kernels.ops import resolve_fuse_spectral
+
+        assert resolve_fuse_spectral(True) is True
+        assert resolve_fuse_spectral(False) is False
+        monkeypatch.setenv("REPRO_FUSE_SPECTRAL", "0")
+        assert resolve_fuse_spectral(None) is False
+        assert resolve_fuse_spectral(True) is True  # explicit beats env
+        monkeypatch.setenv("REPRO_FUSE_SPECTRAL", "1")
+        assert resolve_fuse_spectral(None) is True
+        monkeypatch.delenv("REPRO_FUSE_SPECTRAL")
+        assert resolve_fuse_spectral(None) is True  # default ON
+
+    def test_telemetry_collector_forces_staged(self):
+        """An active autoprec collector must veto the fused path: its
+        per-stage taps observe the HBM spectrum the megakernel never
+        materialises."""
+        from repro.autoprec.telemetry import TraceCollector, collecting
+
+        policy = get_policy("full")
+        fft_in = policy.at("fno/layer0/spectral/fft_in")
+        ctr = policy.at("fno/layer0/spectral/contract")
+        assert ops.fused_spectral_viable(
+            fft_in, ctr, 2, 3, 4, (9, 11), (3, 5))
+        with collecting(TraceCollector()):
+            assert not ops.fused_spectral_viable(
+                fft_in, ctr, 2, 3, 4, (9, 11), (3, 5))

@@ -175,6 +175,29 @@ class TestMetrics:
         snap = registry().snapshot()
         assert "repro_kernels_tiles" in snap.get("external", {})
 
+    def test_fused_family_counter_and_bytes_gauge(self):
+        """One fused launch lands on the per-family traced-call counter
+        and the bytes-moved gauge under the ``spectral_fused`` label."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.core import FULL, init_spectral_weights
+        from repro.kernels import ops
+
+        params = init_spectral_weights(
+            jax.random.PRNGKey(0), 2, 2, (2, 3), "dense")
+        x = jnp.asarray(np.random.RandomState(0).randn(1, 2, 6, 8),
+                        jnp.float32)
+        registry().reset()
+        ops.spectral_conv_fused(x, params["w_re"], params["w_im"], (2, 3),
+                                policy=FULL)
+        snap = registry().snapshot()
+        key = 'repro_kernels_calls_total{family="spectral_fused"}'
+        assert snap["counters"].get(key, 0) >= 1, snap["counters"]
+        gkey = 'repro_kernels_bytes_moved{family="spectral_fused"}'
+        assert snap["gauges"].get(gkey, 0) > 0, snap["gauges"]
+
 
 # ---------------------------------------------------------------------------
 # numerics events

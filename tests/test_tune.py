@@ -46,23 +46,11 @@ def _pristine_calibration(monkeypatch):
     cache_mod.activate(None)
 
 
-def _entry(family, shape, dtype="bfloat16", block_fwd=8, block_bwd=8, **kw):
-    ent = {
-        "family": family, "shape": list(shape), "dtype": dtype,
-        "backend": BACKEND, "kernel_version": KERNEL_VERSION,
-        "block_fwd": block_fwd, "block_bwd": block_bwd, "validated": True,
-    }
-    ent.update(kw)
-    return ent
-
-
-def _state_with(tmp_path, *entries, name="state.json", **header):
-    state = cache_mod.CalibrationCache(entries={}, backend=BACKEND)
-    for ent in entries:
-        state.put(ent)
-    for k, v in header.items():
-        setattr(state, k, v)
-    return cache_mod.save(state, tmp_path / name)
+# shared with test_kernels*.py via tests/helpers.py
+from helpers import (  # noqa: E402
+    calibration_entry as _entry,
+    calibration_state as _state_with,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +63,7 @@ class TestSearchSpace:
         ("dense-fused", (2, 8, 8, 40)),
         ("cp", (2, 8, 8, 4, 40)),
         ("lshared", (2, 8, 8, 12, 9)),
+        ("spectral_fused", (2, 8, 8, 12, 9, 3, 3)),
     ])
     def test_candidates_legal(self, family, shape):
         cands = space.candidates(family, shape, "bfloat16")
@@ -307,8 +296,36 @@ class TestOracleGate:
         assert not verdict["passed"]
         assert verdict["worst_excess"] > 0
 
+    def test_fused_candidate_passes_composed_budget(self):
+        cand = space.Candidate(
+            "spectral_fused", (2, 4, 4, 12, 9, 3, 3), "bfloat16", 2, 2)
+        verdict = oracle.check(cand, interpret=True)
+        assert verdict["passed"], verdict
+
+    def test_fused_seeded_violation_is_rejected(self):
+        """A seeded composed-budget violation on the megakernel must be
+        caught at the oracle's fused branch — the gate prices
+        ``STAGES['spectral_fused']`` requantising stages plus the
+        composed f32 accumulation term, mirroring ``--perturb``."""
+        cand = space.Candidate(
+            "spectral_fused", (2, 4, 4, 12, 9, 3, 3), "bfloat16", 2, 2)
+        verdict = oracle.check(cand, interpret=True, perturb=2.0)
+        assert not verdict["passed"]
+        assert verdict["worst_excess"] > 0
+        # it was the budget comparison that tripped, not a shape error:
+        # the verdict carries the priced budget and the measured error
+        assert verdict["max_err"] > verdict["budget_min"]
+
+    def test_fused_malformed_shape_rejected_loudly(self):
+        with pytest.raises(ValueError, match="spectral_fused"):
+            space.fused_axes((2, 4, 4, 12, 9, 3))  # odd spatial+modes tail
+
     def test_validate_cli_rejects_seeded_violation(self, tmp_path, capsys):
-        p = _state_with(tmp_path, _entry("dense", (2, 4, 4, 9)))
+        p = _state_with(
+            tmp_path,
+            _entry("dense", (2, 4, 4, 9)),
+            _entry("spectral_fused", (2, 4, 4, 12, 9, 3, 3),
+                   block_fwd=2, block_bwd=2))
         argv = ["validate", "--state", str(p), "--interpret"]
         assert tune_main(argv) == 0
         assert tune_main(argv + ["--perturb", "2"]) == 1
